@@ -1,0 +1,93 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Attribute collective traffic: compile one cell and print the largest
+collective ops with their HLO metadata (op_name carries jaxpr provenance).
+
+  PYTHONPATH=src python -m benchmarks.collective_probe --arch X --shape Y \
+      [--set k=v] [--top 15]
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import re            # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import SHAPES, get_config              # noqa: E402
+from repro.launch import specs as SP                      # noqa: E402
+from repro.launch.dryrun import SHAPE_RE, DTYPE_BYTES, OP_RE  # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.launch.steps import make_serve_step, make_train_step  # noqa: E402
+from repro.models import sharding as SH                   # noqa: E402
+
+
+def compile_cell(arch, shape_name, overrides=None, multi_pod=False):
+    cfg = get_config(arch)
+    for k, v in (overrides or {}).items():
+        cur = getattr(cfg, k)
+        v = (v in ("1", "true", "True")) if isinstance(cur, bool) else type(cur)(v)
+        cfg = dataclasses.replace(cfg, **{k: v})
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with mesh, SH.use_mesh(mesh, cfg.layout):
+        args, shardings = SP.input_specs(cfg, shape, mesh)
+        if shape.phase == "train":
+            step = make_train_step(cfg, SP.default_opt_config(cfg),
+                                   moe_group=SP.moe_group_size(cfg, shape, mesh))
+            donate = (0, 1)
+        elif shape.phase == "prefill":
+            from repro.launch.steps import make_prefill_step
+            step = make_prefill_step(cfg)
+            donate = (1,)
+        else:
+            step = make_serve_step(cfg)
+            donate = (1,)
+        jitted = jax.jit(step, in_shardings=shardings, donate_argnums=donate)
+        compiled = jitted.lower(*args).compile()
+    return compiled
+
+
+def top_collectives(hlo_text: str, top: int = 15):
+    rows = []
+    for line in hlo_text.splitlines():
+        m = OP_RE.search(line)
+        if not m:
+            continue
+        nbytes = 0
+        for dt, dims in SHAPE_RE.findall(m.group(1)):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES.get(dt, 4)
+        kind = m.group(2)
+        if kind.endswith("-start"):
+            kind, nbytes = kind[:-6], nbytes // 2
+        name = ""
+        mm = re.search(r'op_name="([^"]*)"', line)
+        if mm:
+            name = mm.group(1)
+        rows.append((nbytes, kind, name))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.set)
+    compiled = compile_cell(args.arch, args.shape, overrides, args.multi_pod)
+    mem = compiled.memory_analysis()
+    print(f"temp={mem.temp_size_in_bytes/1e9:.1f}GB "
+          f"args={mem.argument_size_in_bytes/1e9:.1f}GB")
+    for nbytes, kind, name in top_collectives(compiled.as_text(), args.top):
+        print(f"{nbytes/1e9:9.3f} GB  {kind:20s} {name[:120]}")
+
+
+if __name__ == "__main__":
+    main()

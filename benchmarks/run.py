@@ -1,0 +1,55 @@
+"""Benchmark harness: one function per paper table/figure + the TPU-side
+benches. Prints ``name,us_per_call,derived`` CSV and writes JSON artifacts
+to artifacts/bench/ (consumed by EXPERIMENTS.md).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig13_scheduling] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _headline_str(rec) -> str:
+    h = rec.get("headline", {})
+    return ";".join(f"{k}={v}" for k, v in h.items() if k != "claim")[:200]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="artifacts/bench")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller instance counts (CI smoke)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    from benchmarks.paper_figs import ALL_FIGS
+    from benchmarks import tpu_coschedule
+
+    benches = dict(ALL_FIGS)
+    benches["tpu_coschedule"] = tpu_coschedule.bench
+    if args.only:
+        benches = {k: v for k, v in benches.items() if k == args.only}
+
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        t0 = time.time()
+        if args.fast and name == "fig13_scheduling":
+            rec = fn(instances=100)
+        elif args.fast and name == "fig14_mc_cdf":
+            rec = fn(n_mc=100)
+        else:
+            rec = fn()
+        dt = time.time() - t0
+        with open(os.path.join(args.out, name + ".json"), "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+        print(f"{name},{dt * 1e6:.0f},{_headline_str(rec)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Beyond-paper bench: fused Pallas co-scheduling on TPU terms.
+
+Takes an MXU-bound matmul and an HBM-bound streaming op, computes their
+roofline terms (v5e constants), and reports:
+  * ideal overlap gain of the fused interleave:
+        1 - max(Tc_A + Tc_B, Tm_A + Tm_B) / (max(Tc_A,Tm_A) + max(Tc_B,Tm_B))
+  * the TPU-adapted Markov model's predicted co-scheduling profit (CP) for
+    the same pair,
+  * interpret-mode correctness of the fused kernel vs the two separate ops.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.markov import MarkovModel, co_scheduling_profit
+from repro.core.profiles import TPU_V5E, tpu_profile_from_costs
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _terms(flops, nbytes):
+    return flops / PEAK_FLOPS, nbytes / HBM_BW
+
+
+def bench():
+    # --- workload definition (full-scale, analytic) ---
+    m = k = n = 8192                       # MXU-bound matmul, bf16
+    mm_flops = 2.0 * m * k * n
+    mm_bytes = 2.0 * (m * k + k * n + m * n)
+    p, q = 65536, 8192                     # HBM-bound stream
+    st_flops = float(p * q)
+    st_bytes = 2.0 * 2 * p * q
+    tc_a, tm_a = _terms(mm_flops, mm_bytes)
+    tc_b, tm_b = _terms(st_flops, st_bytes)
+    t_serial = max(tc_a, tm_a) + max(tc_b, tm_b)
+    t_fused = max(tc_a + tc_b, tm_a + tm_b)
+    overlap_gain = 1.0 - t_fused / t_serial
+
+    # --- TPU-adapted Markov model CP for the pair ---
+    prof_a = tpu_profile_from_costs("mxu_matmul", mm_flops, mm_bytes, 64)
+    prof_b = tpu_profile_from_costs("hbm_stream", st_flops, st_bytes, 64)
+    model = MarkovModel(TPU_V5E, three_state=True)
+    ia, ib = model.single_ipc(prof_a, 2), model.single_ipc(prof_b, 2)
+    ca, cb = model.pair_ipc(prof_a, 2, prof_b, 2)
+    cp = co_scheduling_profit((ia, ib), (ca, cb))
+
+    # --- correctness of the fused kernel (interpret mode, small shapes) ---
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(0)
+    ka, kb, kx = jax.random.split(key, 3)
+    a = jax.random.normal(ka, (256, 128), jnp.float32)
+    b = jax.random.normal(kb, (128, 256), jnp.float32)
+    x = jax.random.normal(kx, (1024, 256), jnp.float32)
+    t0 = time.time()
+    mm, st = ops.coschedule(a, b, x, run_a=1, run_b=2)
+    mm.block_until_ready()
+    wall = time.time() - t0
+    mref, sref = ref.coschedule(a, b, x, 2.0)
+    mm_err = float(jnp.max(jnp.abs(mm - mref)))
+    st_err = float(jnp.max(jnp.abs(st - sref)))
+
+    return {
+        "roofline_terms": {"matmul": [tc_a, tm_a], "stream": [tc_b, tm_b]},
+        "t_serial_s": t_serial, "t_fused_s": t_fused,
+        "markov_cp": round(float(cp), 4),
+        "fused_kernel_max_err": max(mm_err, st_err),
+        "interpret_wall_s": wall,
+        "headline": {
+            "ideal_overlap_gain_pct": round(overlap_gain * 100, 1),
+            "markov_cp_pct": round(float(cp) * 100, 1),
+            "fused_correct": max(mm_err, st_err) < 1e-3,
+            "claim": "fused interleave hides the stream's HBM time inside "
+                     "the matmul's MXU time"},
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(bench(), indent=1))

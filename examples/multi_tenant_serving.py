@@ -1,0 +1,10 @@
+"""Shared-pod multi-tenant serving with Kernelet slicing/co-scheduling.
+
+Four tenants submit jobs with different compute/memory profiles; the
+scheduler pairs complementary ones and interleaves their microbatch slices.
+
+  PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+from repro.launch.serve import demo
+
+demo()

@@ -1,0 +1,266 @@
+"""Markov-chain performance model (paper §4.4), faithful reproduction with a
+generalized stall-class extension.
+
+The SM is a stochastic process whose state is, per co-resident kernel, the
+number of scheduling units idle in each *stall class*. Per round (the
+paper's variable-duration time step, during which every ready unit issues
+one instruction):
+
+  ready -> idle(class c) with prob p_c           (issued a stalling instr)
+  idle(c) -> ready       with prob round_dur/L_c (request completed)
+
+Stall classes:
+  mem_c  — coalesced memory;   L = L0 + contention * outstanding_requests
+           (the paper's linear memory-contention model)
+  mem_u  — uncoalesced memory; L_u = uncoal_factor * L   (paper's 3-state)
+  dep    — pipeline dependency; L_dep fixed, no contention (extension: this
+           is what makes compute-compute co-scheduling profitable, matching
+           the paper's measured CI gains; the paper's 2/3-state models are
+           the special cases dep_ratio = 0)
+
+Heterogeneous (two-kernel) states are the product space; round duration and
+memory contention couple the kernels, so the joint transition matrix is
+assembled row-by-row from per-kernel conditional distributions (independent
+given the joint state — paper: "state transitions of different kernels are
+independent with each other").
+
+Steady state is the eigenvector for eigenvalue one (Eq. 3), computed by a
+dense direct solve — state spaces stay tiny because scheduling units are
+thread *blocks*, the paper's own §4.4 complexity reduction.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core.profiles import GPUSpec, KernelProfile
+
+
+@functools.lru_cache(maxsize=200000)
+def _binom_pmf(n: int, p: float) -> tuple:
+    p = min(max(p, 0.0), 1.0)
+    if n == 0:
+        return (1.0,)
+    ks = np.arange(n + 1)
+    logc = np.array([math.lgamma(n + 1) - math.lgamma(k + 1)
+                     - math.lgamma(n - k + 1) for k in ks])
+    with np.errstate(divide="ignore"):
+        pk = logc + ks * np.log(max(p, 1e-300)) + \
+            (n - ks) * np.log(max(1 - p, 1e-300))
+    out = np.exp(pk)
+    if p == 0.0:
+        out = np.zeros(n + 1)
+        out[0] = 1.0
+    elif p == 1.0:
+        out = np.zeros(n + 1)
+        out[-1] = 1.0
+    return tuple(out / out.sum())
+
+
+def stall_classes(prof: KernelProfile):
+    """Ordered stall classes a kernel can occupy: list of (kind, prob)."""
+    classes = [("mem_c", prof.rm * prof.coal)]
+    if prof.coal < 1.0:
+        classes.append(("mem_u", prof.rm * (1.0 - prof.coal)))
+    if getattr(prof, "dep_ratio", 0.0) > 0.0:
+        classes.append(("dep", prof.dep_ratio))
+    return classes
+
+
+def _compositions(w: int, k: int):
+    """All tuples of k non-negative ints with sum <= w."""
+    if k == 0:
+        return [()]
+    out = []
+    for head in range(w + 1):
+        for tail in _compositions(w - head, k - 1):
+            out.append((head,) + tail)
+    return out
+
+
+class MarkovModel:
+    """Homogeneous or heterogeneous Markov model over stall-class states."""
+
+    def __init__(self, gpu: GPUSpec, three_state: bool = True):
+        # three_state=False collapses mem_u into mem_c (paper's base model,
+        # Fig. 10 ablation: 'wrongly assuming coalesced accesses only')
+        self.gpu = gpu
+        self.three_state = three_state
+
+    def _classes(self, prof):
+        cls = stall_classes(prof)
+        if not self.three_state:
+            merged, pc = [], 0.0
+            dep = None
+            for kind, p in cls:
+                if kind.startswith("mem"):
+                    pc += p
+                else:
+                    dep = (kind, p)
+            merged.append(("mem_c", pc))
+            if dep:
+                merged.append(dep)
+            return merged
+        return cls
+
+    def _latency(self, kind: str, n_req: float) -> float:
+        g = self.gpu
+        if kind == "mem_c":
+            return g.mem_latency + g.contention * n_req
+        if kind == "mem_u":
+            return (g.mem_latency + g.contention * n_req) * g.uncoal_factor
+        return g.dep_latency
+
+    @staticmethod
+    def _requests(state, classes, uf: float) -> float:
+        r = 0.0
+        for cnt, (kind, _) in zip(state, classes):
+            if kind == "mem_c":
+                r += cnt
+            elif kind == "mem_u":
+                r += cnt * uf
+        return r
+
+    def _kernel_row_dist(self, prof, w, state, classes, round_dur, n_req,
+                         states, index):
+        """Distribution over next per-kernel states."""
+        n_cls = len(classes)
+        idle = sum(state)
+        r = w - idle
+        probs = [p for _, p in classes]
+        p_stay = max(1.0 - sum(probs), 0.0)
+        ret_p = [min(round_dur / self._latency(kind, n_req), 1.0)
+                 for kind, _ in classes]
+        ret_pmfs = [np.asarray(_binom_pmf(state[c], ret_p[c]))
+                    for c in range(n_cls)]
+        row = np.zeros(len(states))
+        # multinomial over new stalls per class
+        for alloc in _compositions(r, n_cls):
+            n_new = sum(alloc)
+            coef = math.exp(math.lgamma(r + 1)
+                            - sum(math.lgamma(a + 1) for a in alloc)
+                            - math.lgamma(r - n_new + 1))
+            pr = coef * (p_stay ** (r - n_new))
+            for a, p in zip(alloc, probs):
+                pr *= (p ** a) if a else 1.0
+            if pr < 1e-15:
+                continue
+            # independent returns per class
+            for rets in itertools.product(*[range(state[c] + 1)
+                                            for c in range(n_cls)]):
+                pp = pr
+                for c, rc in enumerate(rets):
+                    pp *= ret_pmfs[c][rc]
+                if pp < 1e-16:
+                    continue
+                nxt = tuple(state[c] + alloc[c] - rets[c]
+                            for c in range(n_cls))
+                row[index[nxt]] += pp
+        return row
+
+    def _build(self, profs, ws):
+        all_classes = [self._classes(p) for p in profs]
+        state_sets = [_compositions(w, len(c))
+                      for w, c in zip(ws, all_classes)]
+        idxs = [{s: i for i, s in enumerate(ss)} for ss in state_sets]
+        if len(profs) == 2:
+            joint = list(itertools.product(range(len(state_sets[0])),
+                                           range(len(state_sets[1]))))
+        else:
+            joint = [(a,) for a in range(len(state_sets[0]))]
+        n = len(joint)
+        P = np.zeros((n, n))
+        ready_k = np.zeros((len(profs), n))
+        round_d = np.zeros(n)
+        uf = self.gpu.uncoal_factor
+        row_cache = {}
+        for si, js in enumerate(joint):
+            sts = [state_sets[k][js[k]] for k in range(len(profs))]
+            total_ready = sum(ws) - sum(sum(s) for s in sts)
+            rd = max(total_ready, 1)
+            n_req = sum(self._requests(sts[k], all_classes[k], uf)
+                        for k in range(len(profs)))
+            rows = []
+            for k in range(len(profs)):
+                key = (k, sts[k], rd, round(n_req, 6))
+                if key not in row_cache:
+                    row_cache[key] = self._kernel_row_dist(
+                        profs[k], ws[k], sts[k], all_classes[k], rd, n_req,
+                        state_sets[k], idxs[k])
+                rows.append(row_cache[key])
+            P[si] = np.kron(rows[0], rows[1]) if len(profs) == 2 else rows[0]
+            for k in range(len(profs)):
+                ready_k[k, si] = ws[k] - sum(sts[k])
+            round_d[si] = rd
+        return P, ready_k, round_d
+
+    @staticmethod
+    def _steady_state(P: np.ndarray):
+        """pi (P - I) = 0 with sum(pi)=1 — the paper's Eq. 3 eigenvector."""
+        n = P.shape[0]
+        A = P.T - np.eye(n)
+        A[-1, :] = 1.0
+        b = np.zeros(n)
+        b[-1] = 1.0
+        try:
+            pi = np.linalg.solve(A, b)
+        except np.linalg.LinAlgError:
+            pi, *_ = np.linalg.lstsq(A, b, rcond=None)
+        pi = np.clip(pi, 0.0, None)
+        return pi / pi.sum()
+
+    # ---- public API ---- #
+    def single_ipc(self, prof: KernelProfile, w: Optional[int] = None) -> float:
+        """Modeled IPC, Eq. 4 (scaled by peak_ipc to the paper's axis)."""
+        w = w if w is not None else prof.active_units(self.gpu)
+        P, ready, rd = self._build([prof], [w])
+        pi = self._steady_state(P)
+        return float(pi @ ready[0]) / float(pi @ rd) * self.gpu.peak_ipc
+
+    def pair_ipc(self, p1: KernelProfile, w1: int, p2: KernelProfile,
+                 w2: int):
+        """(cIPC_1, cIPC_2), Eqs. 5-7."""
+        P, ready, rd = self._build([p1, p2], [w1, w2])
+        pi = self._steady_state(P)
+        cyc = float(pi @ rd)
+        return (float(pi @ ready[0]) / cyc * self.gpu.peak_ipc,
+                float(pi @ ready[1]) / cyc * self.gpu.peak_ipc)
+
+
+# --------------------------------------------------------------------- #
+# derived quantities (Eqs. 1, 8)
+# --------------------------------------------------------------------- #
+def co_scheduling_profit(ipcs, cipcs) -> float:
+    """CP = 1 - 1 / sum(cIPC_i / IPC_i)   (Eq. 1)."""
+    s = sum(c / max(i, 1e-12) for c, i in zip(cipcs, ipcs))
+    return 1.0 - 1.0 / max(s, 1e-12)
+
+
+def balanced_slice_sizes(p1: KernelProfile, cipc1: float,
+                         p2: KernelProfile, cipc2: float,
+                         min1: int, min2: int, n_sm: int,
+                         w1: int = 1, w2: int = 1, max_mult: int = 24):
+    """Minimize ΔT = |I1·s1/cIPC1 - I2·s2/cIPC2| (Eq. 8) over slice sizes
+    that are multiples of |SM|, >= the overhead-constrained minimums and
+    >= w_i·|SM| (a slice must fill its claimed per-SM residency)."""
+    min1 = max(min1, w1 * n_sm)
+    min2 = max(min2, w2 * n_sm)
+    best, best_dt = (min1, min2), float("inf")
+    rate1 = p1.insns_per_block / max(cipc1, 1e-12)
+    rate2 = p2.insns_per_block / max(cipc2, 1e-12)
+    for m1 in range(max(1, min1 // n_sm), max_mult + 1):
+        s1 = m1 * n_sm
+        tgt = s1 * rate1 / rate2
+        for s2 in {max(min2, int(round(tgt / n_sm)) * n_sm),
+                   max(min2, (int(tgt) // n_sm) * n_sm),
+                   max(min2, (int(tgt) // n_sm + 1) * n_sm)}:
+            if s2 <= 0:
+                continue
+            dt = abs(s1 * rate1 - s2 * rate2)
+            if dt < best_dt:
+                best, best_dt = (s1, s2), dt
+    return best

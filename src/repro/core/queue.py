@@ -1,0 +1,189 @@
+"""Workload execution (paper §5.4): Poisson-submitted kernel instances drained
+by a scheduling policy; total simulated execution time is the metric.
+
+Policies:
+  BASE     — kernel consolidation [Ravi et al.]: kernels run whole in queue
+             order; a kernel that cannot fill the SM shares leftover units
+             with the next kernel (space/time sharing without slicing).
+  KERNELET — Alg. 1: greedy best-CP pair of *slices* (Markov-model decisions).
+  OPT      — same greedy, but decisions use pre-executed (simulated) IPCs —
+             the offline oracle of §5.1.
+  MC       — random pair + random split/ratio schedules (Fig. 14).
+
+Execution is always charged against the simulator-derived IPCTable: the
+co-scheduled phase drains both kernels at their measured pair cIPCs, the
+survivor drains solo, and every slice launch pays the launch overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.profiles import GPUSpec, KernelProfile
+from repro.core.scheduler import CoSchedule, KerneletScheduler
+from repro.core.simulator import IPCTable
+
+
+@dataclasses.dataclass
+class WorkloadResult:
+    policy: str
+    total_cycles: float
+    n_coschedules: int
+    n_slices: float
+    time_line: list          # (cycles, event) log
+
+
+def make_workload(profiles: Dict[str, KernelProfile], names: List[str],
+                  instances: int = 1000, lam: float = 1.0, seed: int = 0):
+    """Poisson arrivals (same λ per application, paper §5.1). Returns
+    arrival-ordered list of kernel names; with the paper's assumption of a
+    persistent backlog, order only matters for BASE."""
+    rng = np.random.default_rng(seed)
+    arrivals = []
+    for n in names:
+        t = 0.0
+        for _ in range(instances):
+            t += rng.exponential(1.0 / lam)
+            arrivals.append((t, n))
+    arrivals.sort()
+    return [n for _, n in arrivals]
+
+
+class _Pending:
+    """Aggregated remaining blocks per kernel type."""
+
+    def __init__(self, profiles, order):
+        self.profiles = profiles
+        self.blocks = {}
+        for n in order:
+            self.blocks[n] = self.blocks.get(n, 0.0) + profiles[n].num_blocks
+        self.order = []
+        for n in order:                      # queue order with dedup
+            if n not in self.order:
+                self.order.append(n)
+
+    def active(self):
+        return [n for n in self.order if self.blocks.get(n, 0) > 0]
+
+    def drain(self, name, blocks):
+        self.blocks[name] = max(0.0, self.blocks[name] - blocks)
+        if self.blocks[name] <= 0 and name in self.order:
+            self.order.remove(name)
+
+
+def _coexec_phase(p1, b1, p2, b2, c1, c2, s1, s2, gpu):
+    """Drain until one kernel empties. Returns (cycles, drained1, drained2,
+    slices_launched)."""
+    thr1 = c1 * gpu.n_sm / p1.insns_per_block
+    thr2 = c2 * gpu.n_sm / p2.insns_per_block
+    t1 = b1 / max(thr1, 1e-12)
+    t2 = b2 / max(thr2, 1e-12)
+    t = min(t1, t2)
+    d1 = min(b1, thr1 * t)
+    d2 = min(b2, thr2 * t)
+    slices = d1 / max(s1, 1) + d2 / max(s2, 1)
+    return t + slices * gpu.launch_overhead, d1, d2, slices
+
+
+def _solo_phase(prof, blocks, ipc, gpu, slice_size=None):
+    t = blocks * prof.insns_per_block / max(ipc * gpu.n_sm, 1e-12)
+    n_slices = blocks / slice_size if slice_size else 1.0
+    return t + n_slices * gpu.launch_overhead, n_slices
+
+
+def run_policy(policy: str, profiles: Dict[str, KernelProfile],
+               order: List[str], gpu: GPUSpec, truth: IPCTable,
+               *, alpha_p: float = 0.4, alpha_m: float = 0.1,
+               seed: int = 0, mc_rng=None) -> WorkloadResult:
+    vg = gpu.virtual()
+    pend = _Pending(profiles, order)
+    total, n_cos, n_slices = 0.0, 0, 0.0
+    log = []
+
+    if policy in ("KERNELET", "OPT"):
+        sched = KerneletScheduler(
+            gpu, profiles, alpha_p=alpha_p, alpha_m=alpha_m,
+            decision_table=truth if policy == "OPT" else None)
+    else:
+        sched = None
+
+    while pend.active():
+        act = pend.active()
+        if policy == "BASE":
+            # queue order; space/time share leftover units (no slicing)
+            n1 = act[0]
+            p1 = profiles[n1]
+            w1 = p1.active_units(vg)
+            if w1 < vg.units_per_sm and len(act) > 1:
+                n2 = act[1]
+                p2 = profiles[n2]
+                w2 = min(vg.units_per_sm - w1, p2.active_units(vg))
+                c1, c2 = truth.pair(p1, w1, p2, w2)
+                t, d1, d2, _ = _coexec_phase(
+                    p1, pend.blocks[n1], p2, pend.blocks[n2], c1, c2,
+                    p1.num_blocks, p2.num_blocks, gpu)
+                pend.drain(n1, d1)
+                pend.drain(n2, d2)
+            else:
+                ipc = truth.solo(p1, w1)
+                t, _ = _solo_phase(p1, pend.blocks[n1], ipc, gpu)
+                pend.drain(n1, pend.blocks[n1])
+            total += t
+            log.append((total, f"BASE:{n1}"))
+            continue
+
+        if policy == "MC":
+            rng = mc_rng or np.random.default_rng(seed)
+            if len(act) >= 2:
+                n1, n2 = rng.choice(act, size=2, replace=False)
+                p1, p2 = profiles[n1], profiles[n2]
+                W = vg.units_per_sm
+                w1 = int(rng.integers(1, W))
+                w1 = min(w1, p1.active_units(vg))
+                w2 = min(W - w1, p2.active_units(vg))
+                c1, c2 = truth.pair(p1, w1, p2, w2)
+                m1 = int(rng.integers(1, 9)) * gpu.n_sm
+                m2 = int(rng.integers(1, 9)) * gpu.n_sm
+                t, d1, d2, sl = _coexec_phase(
+                    p1, pend.blocks[n1], p2, pend.blocks[n2],
+                    c1, c2, m1, m2, gpu)
+                pend.drain(n1, d1)
+                pend.drain(n2, d2)
+                total += t
+                n_slices += sl
+                n_cos += 1
+            else:
+                n1 = act[0]
+                p1 = profiles[n1]
+                ipc = truth.solo(p1)
+                t, _ = _solo_phase(p1, pend.blocks[n1], ipc, gpu)
+                pend.drain(n1, pend.blocks[n1])
+                total += t
+            continue
+
+        # KERNELET / OPT
+        cs: Optional[CoSchedule] = sched.find_coschedule(act)
+        if cs.k2 is None:
+            p1 = profiles[cs.k1]
+            ipc = truth.solo(p1)
+            t, sl = _solo_phase(p1, pend.blocks[cs.k1], ipc, gpu, cs.s1)
+            pend.drain(cs.k1, pend.blocks[cs.k1])
+            total += t
+            n_slices += sl
+            log.append((total, f"solo:{cs.k1}"))
+            continue
+        p1, p2 = profiles[cs.k1], profiles[cs.k2]
+        c1, c2 = truth.pair(p1, cs.w1, p2, cs.w2)   # execution truth
+        t, d1, d2, sl = _coexec_phase(
+            p1, pend.blocks[cs.k1], p2, pend.blocks[cs.k2],
+            c1, c2, cs.s1, cs.s2, gpu)
+        pend.drain(cs.k1, d1)
+        pend.drain(cs.k2, d2)
+        total += t
+        n_cos += 1
+        n_slices += sl
+        log.append((total, f"co:{cs.k1}+{cs.k2}@{cs.w1}:{cs.w2}"))
+
+    return WorkloadResult(policy, total, n_cos, n_slices, log)

@@ -1,0 +1,160 @@
+"""Kernelet scheduling (paper §4.2-4.3): greedy co-scheduling with PUR/MUR
+pruning, plus the BASE / OPT / MC comparison policies of §5.
+
+Decision path (Kernelet): Markov-model cIPC -> CP (Eq. 1) -> best pair +
+occupancy split; slice sizes from the balanced ratio (Eq. 8) subject to the
+2% overhead minimum (§4.1). Execution is charged against the *simulator*
+IPC table (the hardware stand-in), so a wrong model decision costs real
+simulated time — exactly the paper's prediction/measurement separation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import slicing
+from repro.core.markov import MarkovModel, balanced_slice_sizes, \
+    co_scheduling_profit
+from repro.core.profiles import GPUSpec, KernelProfile
+from repro.core.simulator import IPCTable
+
+
+@dataclasses.dataclass
+class CoSchedule:
+    k1: str
+    k2: Optional[str]
+    w1: int
+    w2: int
+    s1: int                  # slice sizes (blocks)
+    s2: int
+    cp: float                # predicted co-scheduling profit
+    cipc1: float
+    cipc2: float
+
+
+class KerneletScheduler:
+    """FindCoSchedule (Alg. 1) with pruning and the Eq. 8 balanced ratio."""
+
+    def __init__(self, gpu: GPUSpec, profiles: Dict[str, KernelProfile],
+                 *, alpha_p: float = 0.4, alpha_m: float = 0.1,
+                 three_state: bool = True, decision_table: Optional[IPCTable] = None,
+                 p_overhead: float = 2.0, cp_margin: float = None):
+        self.gpu = gpu
+        self.vgpu = gpu.virtual()
+        self.profiles = profiles
+        self.alpha_p = alpha_p
+        self.alpha_m = alpha_m
+        self.model = MarkovModel(self.vgpu, three_state=three_state)
+        # decision_table != None -> oracle mode (OPT): decide on measured IPCs
+        self.decision_table = decision_table
+        self.p_overhead = p_overhead
+        # minimum predicted CP to justify a co-schedule: slices run within
+        # the p% overhead budget (§4.1), so profits below that budget are
+        # not worth chasing
+        self.cp_margin = (p_overhead / 100.0
+                          if cp_margin is None else cp_margin)
+        self._solo_cache: Dict = {}
+        self._pair_cache: Dict = {}
+        self._minslice_cache: Dict = {}
+
+    # ---- decision-side IPCs (model, or table for OPT) ---- #
+    def solo_ipc(self, name: str, w: Optional[int] = None) -> float:
+        prof = self.profiles[name]
+        w = w if w is not None else prof.active_units(self.vgpu)
+        key = (name, w)
+        if key not in self._solo_cache:
+            if self.decision_table is not None:
+                v = self.decision_table.solo(prof, w)
+            else:
+                v = self.model.single_ipc(prof, w)
+            self._solo_cache[key] = v
+        return self._solo_cache[key]
+
+    def pair_ipc(self, n1: str, w1: int, n2: str, w2: int):
+        key = (n1, w1, n2, w2)
+        if key not in self._pair_cache:
+            if self.decision_table is not None:
+                v = self.decision_table.pair(self.profiles[n1], w1,
+                                             self.profiles[n2], w2)
+            else:
+                v = self.model.pair_ipc(self.profiles[n1], w1,
+                                        self.profiles[n2], w2)
+            self._pair_cache[key] = v
+        return self._pair_cache[key]
+
+    def min_slice(self, name: str) -> int:
+        if name not in self._minslice_cache:
+            prof = self.profiles[name]
+            self._minslice_cache[name] = slicing.min_slice_size(
+                prof, self.gpu, self.solo_ipc(name), self.p_overhead)
+        return self._minslice_cache[name]
+
+    # ---- pruning (§4.3) ---- #
+    def prune(self, pairs):
+        """Keep pairs complementary in PUR or MUR: prune when BOTH
+        |ΔPUR| < α_p and |ΔMUR| < α_m (Table 6 semantics)."""
+        kept = []
+        for a, b in pairs:
+            pa, pb = self.profiles[a], self.profiles[b]
+            if abs(pa.pur - pb.pur) < self.alpha_p and \
+               abs(pa.mur - pb.mur) < self.alpha_m:
+                continue
+            kept.append((a, b))
+        return kept
+
+    def pruned_count(self, names) -> int:
+        pairs = list(itertools.combinations(sorted(names), 2))
+        return len(pairs) - len(self.prune(pairs))
+
+    # ---- FindCoSchedule ---- #
+    def find_coschedule(self, pending) -> Optional[CoSchedule]:
+        """pending: iterable of kernel names with blocks remaining."""
+        names = sorted(set(pending))
+        if not names:
+            return None
+        if len(names) == 1:
+            n = names[0]
+            w = self.profiles[n].active_units(self.vgpu)
+            ipc = self.solo_ipc(n)
+            return CoSchedule(n, None, w, 0, self.min_slice(n), 0,
+                              0.0, ipc, 0.0)
+        pairs = list(itertools.combinations(names, 2))
+        kept = self.prune(pairs)
+        alpha_p, alpha_m = self.alpha_p, self.alpha_m
+        while not kept:                       # paper: relax thresholds
+            alpha_p *= 0.5
+            alpha_m *= 0.5
+            kept = [(a, b) for a, b in pairs
+                    if abs(self.profiles[a].pur - self.profiles[b].pur) >= alpha_p
+                    or abs(self.profiles[a].mur - self.profiles[b].mur) >= alpha_m]
+            if alpha_p < 1e-4:
+                kept = pairs
+        best, best_cp = None, -np.inf
+        W = self.vgpu.units_per_sm
+        for a, b in kept:
+            pa, pb = self.profiles[a], self.profiles[b]
+            wa_max = pa.active_units(self.vgpu)
+            wb_max = pb.active_units(self.vgpu)
+            ia, ib = self.solo_ipc(a), self.solo_ipc(b)
+            for wa in range(1, W):
+                wb = min(W - wa, wb_max)
+                if wa > wa_max or wb < 1:
+                    continue
+                c1, c2 = self.pair_ipc(a, wa, b, wb)
+                cp = co_scheduling_profit((ia, ib), (c1, c2))
+                if cp > best_cp:
+                    s1, s2 = balanced_slice_sizes(
+                        pa, c1, pb, c2, self.min_slice(a), self.min_slice(b),
+                        self.gpu.n_sm, w1=wa, w2=wb)
+                    best = CoSchedule(a, b, wa, wb, s1, s2, cp, c1, c2)
+                    best_cp = cp
+        if best is None or best.cp <= self.cp_margin:
+            # no pair predicted profitable -> run the head kernel solo
+            n = names[0]
+            w = self.profiles[n].active_units(self.vgpu)
+            return CoSchedule(n, None, w, 0, self.min_slice(n), 0, 0.0,
+                              self.solo_ipc(n), 0.0)
+        return best

@@ -1,0 +1,190 @@
+"""Discrete-event SM simulator — the "hardware" stand-in.
+
+This box has no GPU, so measured quantities in the paper's figures are
+produced by a round-based discrete-event simulator implementing the same SM
+physics the Markov model abstracts (round-robin issue among ready units,
+memory stalls with contention-dependent latency, coalesced/uncoalesced
+access, co-resident kernels sharing unit slots). The Markov model is then
+validated *against this simulator* exactly as the paper validates against
+real GPUs — prediction vs measurement.
+
+Granularity matches the model: one scheduling unit = one thread block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.profiles import GPUSpec, KernelProfile
+
+
+@dataclasses.dataclass
+class SimResult:
+    ipcs: list              # per-kernel IPC (paper scale)
+    cycles: float           # total cycles simulated / makespan
+    instructions: list      # per-kernel instructions issued
+    pur: list               # per-kernel pipeline utilization ratio
+    mur: list               # per-kernel memory utilization ratio
+
+
+def simulate(profiles, units, gpu: GPUSpec, *, seed: int = 0,
+             rounds: int = 20000, blocks: Optional[list] = None,
+             insns_per_block: Optional[list] = None) -> SimResult:
+    """Simulate co-resident kernels on one (virtual) SM.
+
+    profiles: list of KernelProfile; units: per-kernel active unit slots.
+    If ``blocks`` is given, runs in makespan mode: unit slots retire blocks
+    (insns_per_block instructions each) until the per-kernel block budget is
+    exhausted; otherwise measures steady-state IPC over ``rounds``.
+    """
+    rng = np.random.default_rng(seed)
+    nk = len(profiles)
+    owner, rem_lat, rem_ins = [], [], []
+    blocks_left = list(blocks) if blocks is not None else [np.inf] * nk
+    ipb = (insns_per_block if insns_per_block is not None
+           else [p.insns_per_block for p in profiles])
+    for k in range(nk):
+        for _ in range(units[k]):
+            if blocks_left[k] > 0:
+                blocks_left[k] -= 1
+                owner.append(k)
+                rem_lat.append(0.0)
+                rem_ins.append(ipb[k])
+    owner = np.array(owner)
+    rem_lat = np.array(rem_lat, dtype=np.float64)
+    rem_ins = np.array(rem_ins, dtype=np.float64)
+    uncoal = np.zeros(len(owner), dtype=bool)
+    mem_pend = np.zeros(len(owner), dtype=bool)   # stalled on memory (vs dep)
+    alive = np.ones(len(owner), dtype=bool)
+
+    instr = np.zeros(nk)
+    mem_reqs = np.zeros(nk)
+    cycles = 0.0
+    r = 0
+    while True:
+        r += 1
+        if blocks is None and r > rounds:
+            break
+        if not alive.any():
+            break
+        ready = alive & (rem_lat <= 0)
+        n_ready = int(ready.sum())
+        dur = max(n_ready, 1)
+        # issue one instruction per ready unit
+        if n_ready:
+            ks = owner[ready]
+            np.add.at(instr, ks, 1.0)
+            rem_ins[ready] -= 1.0
+            # stalls: memory (coalesced / uncoalesced) or pipeline dependency
+            rms = np.array([profiles[k].rm for k in ks])
+            coals = np.array([profiles[k].coal for k in ks])
+            deps = np.array([profiles[k].dep_ratio for k in ks])
+            u = rng.random(n_ready)
+            mem_stall = u < rms
+            dep_stall = (~mem_stall) & (u < rms + deps)
+            is_uncoal = mem_stall & (rng.random(n_ready) >= coals)
+            n_req_now = float((mem_pend[alive]).sum()
+                              + uncoal[alive & mem_pend].sum()
+                              * (gpu.uncoal_factor - 1))
+            lat_c = gpu.mem_latency + gpu.contention * n_req_now
+            lat = np.where(is_uncoal, lat_c * gpu.uncoal_factor, lat_c)
+            idx = np.where(ready)[0]
+            st_idx = idx[mem_stall]
+            rem_lat[st_idx] = lat[mem_stall]
+            uncoal[st_idx] = is_uncoal[mem_stall]
+            mem_pend[st_idx] = True
+            dp_idx = idx[dep_stall]
+            rem_lat[dp_idx] = gpu.dep_latency
+            mem_pend[dp_idx] = False
+            np.add.at(mem_reqs, ks[mem_stall],
+                      np.where(is_uncoal[mem_stall], gpu.uncoal_factor, 1.0))
+        # advance time
+        cycles += dur
+        rem_lat = np.maximum(rem_lat - dur, 0.0)
+        mem_pend &= rem_lat > 0
+        # block retirement (makespan mode)
+        if blocks is not None:
+            done = alive & (rem_ins <= 0) & (rem_lat <= 0)
+            for i in np.where(done)[0]:
+                k = owner[i]
+                if blocks_left[k] > 0:
+                    blocks_left[k] -= 1
+                    rem_ins[i] = ipb[k]
+                else:
+                    alive[i] = False
+    ipcs = [instr[k] / max(cycles, 1.0) * gpu.peak_ipc for k in range(nk)]
+    purs = [ipcs[k] / gpu.peak_ipc for k in range(nk)]
+    murs = [mem_reqs[k] / max(cycles, 1.0) / gpu.bw_per_sm for k in range(nk)]
+    return SimResult(ipcs=ipcs, cycles=cycles, instructions=list(instr),
+                     pur=purs, mur=murs)
+
+
+# --------------------------------------------------------------------- #
+# cached IPC tables ("pre-execution", used as ground truth / oracle input)
+# --------------------------------------------------------------------- #
+class IPCTable:
+    """Caches simulator measurements: solo IPCs and pair cIPCs per split."""
+
+    def __init__(self, gpu: GPUSpec, seed: int = 0, rounds: int = 12000):
+        self.gpu = gpu
+        self.seed = seed
+        self.rounds = rounds
+        self._solo = {}
+        self._pair = {}
+
+    def solo(self, prof: KernelProfile, w: Optional[int] = None) -> float:
+        w = w if w is not None else prof.active_units(self.gpu)
+        key = (prof.name, w)
+        if key not in self._solo:
+            res = simulate([prof], [w], self.gpu, seed=self.seed,
+                           rounds=self.rounds)
+            self._solo[key] = res.ipcs[0]
+        return self._solo[key]
+
+    def pair(self, p1: KernelProfile, w1: int, p2: KernelProfile, w2: int):
+        key = (p1.name, w1, p2.name, w2)
+        if key not in self._pair:
+            res = simulate([p1, p2], [w1, w2], self.gpu, seed=self.seed,
+                           rounds=self.rounds)
+            self._pair[key] = (res.ipcs[0], res.ipcs[1])
+        return self._pair[key]
+
+
+# --------------------------------------------------------------------- #
+# analytic makespan of a scheduled execution, driven by an IPC table
+# --------------------------------------------------------------------- #
+def coexec_makespan(b1: float, i1: float, b2: float, i2: float,
+                    cipc1: float, cipc2: float, ipc1: float, ipc2: float,
+                    s1: int, s2: int, gpu: GPUSpec) -> float:
+    """Cycles to drain b1 blocks of K1 (i1 instr each) co-scheduled with b2
+    of K2, slice sizes (s1, s2), per-SM ipcs given. The co-scheduled phase
+    runs while both have blocks; the survivor drains solo. Slice launch
+    overhead is charged per slice launch (paper Fig. 6 physics)."""
+    per_sm = gpu.n_sm
+    # per-GPU throughputs (blocks/cycle)
+    thr1 = cipc1 * per_sm / max(i1, 1e-9)
+    thr2 = cipc2 * per_sm / max(i2, 1e-9)
+    t_drain1 = b1 / max(thr1, 1e-12)
+    t_drain2 = b2 / max(thr2, 1e-12)
+    t_co = min(t_drain1, t_drain2)
+    if t_drain1 <= t_drain2:
+        rem2 = b2 - thr2 * t_co
+        t_solo = rem2 * i2 / max(ipc2 * per_sm, 1e-12)
+        n_slices = b1 / max(s1, 1) + (b2 - rem2) / max(s2, 1) + rem2 / max(s2, 1)
+    else:
+        rem1 = b1 - thr1 * t_co
+        t_solo = rem1 * i1 / max(ipc1 * per_sm, 1e-12)
+        n_slices = b2 / max(s2, 1) + (b1 - rem1) / max(s1, 1) + rem1 / max(s1, 1)
+    return t_co + t_solo + n_slices * gpu.launch_overhead
+
+
+def solo_makespan(blocks: float, insns: float, ipc: float, gpu: GPUSpec,
+                  slice_size: Optional[int] = None) -> float:
+    t = blocks * insns / max(ipc * gpu.n_sm, 1e-12)
+    if slice_size:
+        t += blocks / slice_size * gpu.launch_overhead
+    else:
+        t += gpu.launch_overhead
+    return t

@@ -1,0 +1,81 @@
+"""Causal flash attention (Pallas TPU): online-softmax over KV tiles with
+VMEM accumulators; upper-triangular KV tiles are skipped via pl.when.
+Layout (B, H, S, D); blocks are (bq, D) x (bk, D) per (batch*head) row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, n_k: int, scale: float, causal: bool):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (ki * bk <= qi * bq + bq - 1) if causal else True
+
+    @pl.when(run)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32)                     # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                     # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = False):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0
+    n_q, n_k = s // bq, s // bk
+    qr = q.reshape(b * h, s, d)
+    kr = k.reshape(b * h, s, d)
+    vr = v.reshape(b * h, s, d)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, n_k=n_k,
+                          scale=1.0 / np.sqrt(d), causal=causal),
+        grid=(b * h, n_q, n_k),
+        in_specs=[pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+                  pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+                  pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0))],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, d)

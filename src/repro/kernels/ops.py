@@ -1,0 +1,59 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same entry points work in CPU
+tests and on real hardware (set REPRO_PALLAS_INTERPRET=0 on TPU).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import coschedule as _cs
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rg_lru as _lru
+from repro.kernels import rwkv6_scan as _wkv
+from repro.kernels import sliced_matmul as _sm
+
+
+def _default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("slice_size", "bm", "bn", "bk"))
+def sliced_matmul(a, b, *, slice_size: int = 4, bm: int = 128,
+                  bn: int = 128, bk: int = 128):
+    return _sm.sliced_matmul(a, b, slice_size=slice_size, bm=bm, bn=bn,
+                             bk=bk, interpret=_default_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "run_a", "run_b", "bm", "bn", "bx"))
+def coschedule(a, b, x, *, scale: float = 2.0, run_a: int = 1,
+               run_b: int = 1, bm: int = 128, bn: int = 128, bx: int = 256):
+    return _cs.coschedule(a, b, x, scale=scale, run_a=run_a, run_b=run_b,
+                          bm=bm, bn=bn, bx=bx,
+                          interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                               interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_scan(r, k, v, w_log, u, *, chunk: int = 32):
+    return _wkv.rwkv6_scan(r, k, v, w_log, u, chunk=chunk,
+                           interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bw"))
+def rg_lru(x, a_log, *, chunk: int = 128, bw: int = 512):
+    return _lru.rg_lru(x, a_log, chunk=chunk, bw=bw,
+                       interpret=_default_interpret())

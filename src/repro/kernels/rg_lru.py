@@ -1,0 +1,58 @@
+"""RG-LRU linear recurrence (Griffin) as a Pallas TPU kernel.
+
+Grid (B, W_blocks, n_chunks); chunks sequential with the hidden state
+carried in VMEM scratch; within a chunk the first-order recurrence is
+computed with an associative scan over the time axis of the block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lru_kernel(x_ref, a_ref, o_ref, h_ref, *, chunk: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _reset():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)                 # (C, bw)
+    a_log = a_ref[0].astype(jnp.float32)             # (C, bw), <= 0
+    a = jnp.exp(a_log)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * a_log), 1e-12)) * x
+    h0 = h_ref[0]                                    # (1, bw) scratch row
+    b = b.at[0].add(a[0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a, b), axis=0)
+    o_ref[0] = hs.astype(o_ref.dtype)
+    h_ref[0] = hs[-1]
+
+
+def rg_lru(x, a_log, *, chunk: int = 128, bw: int = 512,
+           interpret: bool = False):
+    """x, a_log: (B, S, W) -> h: (B, S, W) f32. Zero initial state."""
+    b, s, w = x.shape
+    chunk = min(chunk, s)
+    bw = min(bw, w)
+    assert s % chunk == 0 and w % bw == 0
+    nc, nw = s // chunk, w // bw
+    out = pl.pallas_call(
+        functools.partial(_lru_kernel, chunk=chunk),
+        grid=(b, nw, nc),
+        in_specs=[pl.BlockSpec((1, chunk, bw), lambda i, j, c: (i, c, j))] * 2,
+        out_specs=pl.BlockSpec((1, chunk, bw), lambda i, j, c: (i, c, j)),
+        out_shape=jax.ShapeDtypeStruct((b, s, w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        interpret=interpret,
+    )(x, a_log)
+    return out

@@ -1,0 +1,99 @@
+"""Sliced matmul — the paper's kernel slicing + index rectification (Fig. 3)
+at the Pallas level.
+
+A matmul over an (M/bm x N/bn) tile grid is executed as a sequence of
+*slices*: each ``pallas_call`` launch covers ``slice_size`` consecutive
+tiles starting at ``offset``. Inside the launch the slice-local grid step is
+rectified to the global tile id (``g = offset + local``) and decomposed into
+(i, j) tile coordinates by the BlockSpec index_maps — exactly the paper's
+rBlockID arithmetic, done in the TPU grid index space instead of PTX
+registers.
+
+Slice "occupancy" on TPU = in-flight pipeline stages; tiny slices lose
+DMA/compute overlap at launch boundaries — the TPU analogue of the paper's
+occupancy-loss overhead (Fig. 6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_BM, DEF_BN, DEF_BK = 128, 128, 128
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """One (slice-local tile, k) step: acc += a @ b; flush on last k."""
+    k_idx = pl.program_id(1)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_slice(a, b, *, offset: int, slice_size: int,
+                 bm: int = DEF_BM, bn: int = DEF_BN, bk: int = DEF_BK,
+                 interpret: bool = False):
+    """Compute ``slice_size`` consecutive output tiles of a@b starting at
+    linearized tile id ``offset``. Returns the packed tiles
+    (slice_size, bm, bn); the slice driver scatters them into place."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape)
+    n_i, n_j, n_k = m // bm, n // bn, k // bk
+    assert 0 <= offset and offset + slice_size <= n_i * n_j
+
+    def a_map(s, kk):            # index rectification: local -> global tile
+        g = offset + s
+        return (g // n_j, kk)
+
+    def b_map(s, kk):
+        g = offset + s
+        return (kk, g % n_j)
+
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=n_k),
+        grid=(slice_size, n_k),
+        in_specs=[pl.BlockSpec((bm, bk), a_map),
+                  pl.BlockSpec((bk, bn), b_map)],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda s, kk: (s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((slice_size, bm, bn), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+
+
+def sliced_matmul(a, b, *, slice_size: int = 4,
+                  bm: int = DEF_BM, bn: int = DEF_BN, bk: int = DEF_BK,
+                  interpret: bool = False):
+    """Full matmul as a loop of slice launches (paper Fig. 3d).
+
+    The host-side loop is where Kernelet interleaves slices of *different*
+    kernels; here one kernel's slices run back-to-back. Result is bitwise
+    the unsliced product (slicing safety: tiles are independent)."""
+    m, k = a.shape
+    n = b.shape[1]
+    n_i, n_j = m // bm, n // bn
+    n_tiles = n_i * n_j
+    tiles = []
+    off = 0
+    while off < n_tiles:
+        sz = min(slice_size, n_tiles - off)
+        tiles.append(matmul_slice(a, b, offset=off, slice_size=sz,
+                                  bm=bm, bn=bn, bk=bk, interpret=interpret))
+        off += sz
+    packed = jnp.concatenate(tiles, axis=0)        # (n_tiles, bm, bn)
+    out = packed.reshape(n_i, n_j, bm, bn).transpose(0, 2, 1, 3)
+    return out.reshape(m, n)

@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes and record memory/cost/collective analyses for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-3b \
+      --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_config  # noqa: E402
+from repro.launch import specs as SP                                       # noqa: E402
+from repro.launch.mesh import make_production_mesh                         # noqa: E402
+from repro.launch.steps import make_serve_step, make_train_step            # noqa: E402
+from repro.models import sharding as SH                                    # noqa: E402
+
+OP_RE = re.compile(
+    r"=\s*(.*?)\s*"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64)\[([0-9,]*)\]")
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+
+
+def _shape_bytes(text: str) -> int:
+    nbytes = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes += n * DTYPE_BYTES.get(dt, 4)
+    return nbytes
+
+
+def collective_bytes(hlo_text: str, trips=None) -> dict:
+    """Sum result-shape bytes of every collective op in the compiled HLO.
+
+    Async pairs are counted at the -start op (whose tuple shape holds
+    operand+result: halved); '-done' ops don't match (no '(' after name).
+
+    XLA emits each ``while`` (lax.scan) body ONCE, but its collectives run
+    on every iteration. ``trips`` is a list of per-nesting-level trip
+    counts (level 1 = the layer scan, deeper = intra-layer scans); the
+    op's jaxpr provenance (op_name metadata) tells us its loop depth, and
+    the corrected totals multiply accordingly. Raw (static) totals are
+    kept alongside.
+    """
+    out = {}
+    for line in hlo_text.splitlines():
+        m = OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        nbytes = _shape_bytes(m.group(1))
+        if kind.endswith("-start"):
+            kind = kind[:-6]
+            nbytes //= 2
+        depth = line.count("while/body")
+        mult = 1.0
+        if trips:
+            for lvl in range(min(depth, len(trips))):
+                mult *= trips[lvl]
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0,
+                                    "bytes_corrected": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+        rec["bytes_corrected"] += nbytes * mult
+    return out
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{)%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def collective_bytes_structural(hlo_text: str) -> dict:
+    """Loop-aware collective accounting from the HLO structure itself.
+
+    Parses computations, the while-op call graph and each loop's trip count
+    (the constant bound in its condition computation), then multiplies every
+    collective by the product of trip counts of the loops whose *bodies*
+    (transitively) contain it. Unlike op_name provenance, this respects
+    XLA's loop-invariant hoisting: an op moved out of the loop is counted
+    once.
+    """
+    # --- split into computations ---
+    comps = {}
+    cur, buf = None, []
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip()) if line and not line.startswith(" ") \
+            else None
+        if m:
+            cur = m.group(1)
+            buf = []
+            comps[cur] = buf
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                buf.append(line)
+    # --- call graph with loop multipliers ---
+    m_entry = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.M)
+    entry = m_entry.group(1) if m_entry else next(iter(comps), None)
+
+    def cond_trip(cond_name: str) -> int:
+        consts = [int(c) for c in
+                  _CONST_RE.findall("\n".join(comps.get(cond_name, [])))]
+        return max(consts) if consts else 1
+
+    mult = {entry: 1.0}
+    stack = [entry]
+    seen = set()
+    while stack:
+        comp = stack.pop()
+        if comp in seen or comp not in comps:
+            continue
+        seen.add(comp)
+        base = mult.get(comp, 1.0)
+        for line in comps[comp]:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trip = max(cond_trip(cond), 1)
+                for callee, factor in ((body, base * trip), (cond, base)):
+                    if factor > mult.get(callee, 0.0):
+                        mult[callee] = factor
+                        seen.discard(callee)
+                    stack.append(callee)
+            else:
+                for callee in _CALL_RE.findall(line):
+                    if base > mult.get(callee, 0.0):
+                        mult[callee] = base
+                        seen.discard(callee)
+                    stack.append(callee)
+    # --- collect collectives with their computation's multiplier ---
+    out = {}
+    for comp, lines in comps.items():
+        factor = mult.get(comp, 1.0)
+        for line in lines:
+            m = OP_RE.search(line)
+            if not m:
+                continue
+            kind = m.group(2)
+            nbytes = _shape_bytes(m.group(1))
+            if kind.endswith("-start"):
+                kind, nbytes = kind[:-6], nbytes // 2
+            rec = out.setdefault(kind, {"count": 0, "bytes": 0,
+                                        "bytes_corrected": 0.0})
+            rec["count"] += 1
+            rec["bytes"] += nbytes
+            rec["bytes_corrected"] += nbytes * factor
+    return out
+
+
+def trip_counts(cfg, shape) -> list:
+    """Per-nesting-level scan trip counts for collective correction."""
+    lvl1 = cfg.num_layers + cfg.encoder_layers
+    if shape.phase == "decode":
+        return [lvl1, 1, 1]
+    inner = max(shape.seq_len // 1024, 1)          # chunked-attention blocks
+    if cfg.moe is not None and shape.phase == "train":
+        from repro.launch import specs as _sp
+        inner = max(inner, 8)                       # moe group scan
+    return [lvl1, inner, max(shape.seq_len // 1024, 1)]
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             skip_existing: bool = True, overrides: dict = None,
+             variant: str = ""):
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    if variant:
+        tag += f"__{variant}"
+    path = os.path.join(out_dir, tag + ".json")
+    if skip_existing and os.path.exists(path):
+        print(f"[skip] {tag}")
+        return True
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses as _dc
+        typed = {}
+        for k, v in overrides.items():
+            if "." in k:                       # nested, e.g. moe.a2a_dtype
+                parent, field = k.split(".", 1)
+                sub = getattr(cfg, parent)
+                cur = getattr(sub, field)
+                val = (v in ("1", "true", "True", True)) \
+                    if isinstance(cur, bool) else type(cur)(v)
+                typed[parent] = _dc.replace(sub, **{field: val})
+                continue
+            cur = getattr(cfg, k)
+            typed[k] = type(cur)(v) if cur is not None and \
+                not isinstance(cur, bool) else (v in ("1", "true", "True", True))
+        cfg = _dc.replace(cfg, **typed)
+    shape = SHAPES[shape_name]
+    # small dense archs train communication-bound under TP=16 at this batch
+    # geometry: pure-FSDP layout is the optimized default (see §Perf)
+    import dataclasses as _dc2
+    if shape_name == "train_4k" and cfg.layout == "2d" and \
+            cfg.param_count() < 2e10 and "layout" not in (overrides or {}):
+        cfg = _dc2.replace(cfg, layout="fsdp")
+    # serving: resident weights for archs that fit 16 GB/chip at TP=16
+    if shape.phase != "train" and cfg.param_count() < 3e10 and \
+            "param_fsdp" not in (overrides or {}):
+        cfg = _dc2.replace(cfg, param_fsdp=False)
+    if shape not in applicable_shapes(cfg):
+        print(f"[n/a ] {tag} (shape inapplicable: "
+              f"{'full attention' if not cfg.sub_quadratic else '?'})")
+        return True
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+              "phase": shape.phase, "variant": variant,
+              "overrides": overrides or {}}
+    try:
+        with mesh, SH.use_mesh(mesh, cfg.layout):
+            args, shardings = SP.input_specs(cfg, shape, mesh)
+            if shape.phase == "train":
+                step = make_train_step(
+                    cfg, SP.default_opt_config(cfg),
+                    moe_group=SP.moe_group_size(cfg, shape, mesh))
+                donate = (0, 1)
+            elif shape.phase == "prefill":
+                from repro.launch.steps import make_prefill_step
+                step = make_prefill_step(cfg)
+                donate = (1,)
+            else:
+                step = make_serve_step(cfg)
+                donate = (1,)
+            jitted = jax.jit(step, in_shardings=shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        record["cost"] = {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float)) and
+                          (k in ("flops", "bytes accessed") or
+                           k.startswith("bytes accessed"))}
+        hlo_text = compiled.as_text()
+        record["collectives"] = collective_bytes_structural(hlo_text)
+        record["collectives_provenance"] = collective_bytes(
+            hlo_text, trips=trip_counts(cfg, shape))
+        record["lower_s"] = round(t_lower, 1)
+        record["compile_s"] = round(t_compile, 1)
+        record["ok"] = True
+        print(f"[ ok ] {tag}  lower={t_lower:.0f}s compile={t_compile:.0f}s "
+              f"flops={record['cost'].get('flops', 0):.3e}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        record["ok"] = False
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {tag}: {record['error'][:200]}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record.get("ok", False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="tag appended to the artifact name")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (repeatable)")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.set)
+    ok = True
+    if args.all:
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            for shape in applicable_shapes(cfg):
+                for mp in ((False, True) if args.both_meshes
+                           else (args.multi_pod,)):
+                    ok &= run_cell(arch, shape.name, mp, args.out,
+                                   skip_existing=not args.force,
+                                   overrides=overrides, variant=args.variant)
+    else:
+        for mp in ((False, True) if args.both_meshes else (args.multi_pod,)):
+            ok &= run_cell(args.arch, args.shape, mp, args.out,
+                           skip_existing=not args.force,
+                           overrides=overrides, variant=args.variant)
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Multi-tenant shared-pod serving — Kernelet as a first-class feature.
+
+Tenants submit jobs (arch x phase); each job's step is sliced into
+microbatch slices (the thread-block analogue). Every job gets a
+two-resource profile (PUR = compute-roofline utilization, MUR =
+memory-roofline utilization) derived from its compiled cost analysis; the
+KerneletScheduler picks the complementary pair with max predicted CP and
+the balanced slice ratio (Eq. 8), and the dispatcher interleaves their
+slices on the shared mesh. On TPU the fused path is
+``repro.kernels.coschedule``; on CPU the interleaved dispatch is executed
+for correctness and the co-scheduling profit is reported from the
+TPU-adapted Markov model.
+
+  PYTHONPATH=src python -m repro.launch.serve --demo
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.markov import MarkovModel, co_scheduling_profit
+from repro.core.profiles import TPU_V5E, KernelProfile, tpu_profile_from_costs
+from repro.core.scheduler import KerneletScheduler
+from repro.data.synthetic import make_batch
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Job:
+    name: str
+    arch: str
+    phase: str                  # "prefill" | "decode" | "train"
+    num_slices: int             # microbatch slices pending
+    batch_per_slice: int = 2
+    seq: int = 64
+
+
+class SharedPodServer:
+    """Kernelet executor over a queue of tenant jobs."""
+
+    def __init__(self, *, gpu_spec=TPU_V5E, seed: int = 0):
+        self.spec = gpu_spec
+        self.model = MarkovModel(gpu_spec.virtual(), three_state=True)
+        self.jobs: Dict[str, Job] = {}
+        self.profiles: Dict[str, KernelProfile] = {}
+        self._exec: Dict[str, callable] = {}
+        self._args: Dict[str, tuple] = {}
+        self.key = jax.random.PRNGKey(seed)
+        self.log: List[tuple] = []
+
+    # ---- job admission: build, profile, register ---- #
+    def submit(self, job: Job):
+        cfg = reduced(get_config(job.arch))
+        params = T.init_params(cfg, self.key)
+        raw = make_batch(cfg, job.batch_per_slice, job.seq)
+        if job.phase == "decode":
+            caches = T.init_decode_caches(cfg, job.batch_per_slice, job.seq)
+            tok = jnp.asarray(raw["tokens"][:, 0])
+
+            def run(params=params, cfg=cfg, caches=caches, tok=tok):
+                logits, _ = T.decode_step(params, cfg, caches, tok,
+                                          jnp.int32(job.seq // 2))
+                return logits
+        else:
+            batch = {k: jnp.asarray(v) for k, v in raw.items()
+                     if k != "labels"}
+
+            def run(params=params, cfg=cfg, batch=batch):
+                logits, _, _ = T.forward(params, cfg, batch)
+                return logits
+        jitted = jax.jit(run)
+        jitted.lower().compile()           # executable for the dispatcher
+        # profile at FULL scale: the tenant's real job is the full config
+        # on the production pod; its analytic FLOPs/bytes give the PUR/MUR
+        # the scheduler reasons about (reduced-config compiled costs would
+        # be uniformly memory-bound and hide complementarity)
+        from repro.configs import SHAPES
+        from repro.core.costs import cell_cost
+        full_cfg = get_config(job.arch)
+        shape = SHAPES[{"prefill": "prefill_32k", "decode": "decode_32k",
+                        "train": "train_4k"}[job.phase]]
+        cost = cell_cost(full_cfg, shape)
+        prof = tpu_profile_from_costs(
+            job.name, cost["flops"], cost["hbm_bytes"],
+            num_blocks=job.num_slices)
+        # slice-level book-keeping: one block == one microbatch slice
+        prof = dataclasses.replace(prof, insns_per_block=1000.0,
+                                   num_blocks=job.num_slices)
+        self.jobs[job.name] = job
+        self.profiles[job.name] = prof
+        self._exec[job.name] = jitted
+        self.log.append(("submit", job.name, prof.pur, prof.mur, prof.rm))
+
+    # ---- scheduling + interleaved dispatch ---- #
+    def drain(self, *, max_rounds: int = 10000):
+        sched = KerneletScheduler(self.spec, self.profiles,
+                                  alpha_p=0.2, alpha_m=0.2, cp_margin=0.0)
+        t0 = time.time()
+        executed = []
+        while any(j.num_slices > 0 for j in self.jobs.values()):
+            act = [n for n, j in self.jobs.items() if j.num_slices > 0]
+            cs = sched.find_coschedule(act)
+            if cs.k2 is None:
+                n_run = min(self.jobs[cs.k1].num_slices, 8)
+                for _ in range(n_run):
+                    self._exec[cs.k1]().block_until_ready()
+                self.jobs[cs.k1].num_slices -= n_run
+                executed.append((cs.k1, None, n_run, 0, 0.0))
+                continue
+            # balanced interleave: issue s1:s2 slices per round, async
+            r1 = max(1, round(cs.s1 / self.spec.n_sm))
+            r2 = max(1, round(cs.s2 / self.spec.n_sm))
+            j1, j2 = self.jobs[cs.k1], self.jobs[cs.k2]
+            outs = []
+            n1 = min(r1, j1.num_slices)
+            n2 = min(r2, j2.num_slices)
+            for _ in range(max(n1, n2)):
+                if n1 > 0:
+                    outs.append(self._exec[cs.k1]())
+                if n2 > 0:
+                    outs.append(self._exec[cs.k2]())
+            for o in outs:
+                o.block_until_ready()
+            j1.num_slices -= n1
+            j2.num_slices -= n2
+            executed.append((cs.k1, cs.k2, n1, n2, cs.cp))
+            if len(executed) > max_rounds:
+                raise RuntimeError("scheduler did not drain")
+        wall = time.time() - t0
+        return {"rounds": executed, "wall_s": wall,
+                "predicted_gain": self._predicted_gain(executed)}
+
+    def _predicted_gain(self, executed) -> float:
+        """Aggregate modeled co-scheduling profit over executed rounds."""
+        cps, weights = [], []
+        for k1, k2, n1, n2, cp in executed:
+            if k2 is not None:
+                cps.append(cp)
+                weights.append(n1 + n2)
+        if not cps:
+            return 0.0
+        return float(np.average(cps, weights=weights))
+
+
+def demo():
+    server = SharedPodServer()
+    server.submit(Job("tenantA-phi3-prefill", "phi3-mini-3.8b", "prefill", 24))
+    server.submit(Job("tenantB-dsv2-decode", "deepseek-v2-236b", "decode", 24))
+    server.submit(Job("tenantC-rwkv-prefill", "rwkv6-1.6b", "prefill", 16))
+    server.submit(Job("tenantD-sc2-decode", "starcoder2-15b", "decode", 16))
+    for ev in server.log:
+        print("submitted", ev[1], f"PUR={ev[2]:.2f} MUR={ev[3]:.2f} R_m={ev[4]:.2f}")
+    res = server.drain()
+    for k1, k2, n1, n2, cp in res["rounds"]:
+        print(f"co-schedule {k1} x {k2}: slices {n1}:{n2}  predicted CP={cp:+.3f}")
+    print(f"drained in {res['wall_s']:.1f}s; "
+          f"mean predicted co-scheduling profit {res['predicted_gain']:+.1%}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--demo", action="store_true")
+    ap.parse_args()
+    demo()

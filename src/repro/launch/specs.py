@@ -1,0 +1,106 @@
+"""ShapeDtypeStruct stand-ins for every model input/state — the dry-run's
+no-allocation inputs, plus their shardings on a given mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import VLM_PATCHES
+from repro.models import sharding as SH
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def batch_specs(cfg, shape):
+    """Training/prefill batch ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    out = {"tokens": sds((b, s), jnp.int32)}
+    if shape.phase == "train":
+        out["labels"] = sds((b, s), jnp.int32)
+    if cfg.frontend == "vision_stub":
+        out["patches"] = sds((b, min(VLM_PATCHES, s // 2), cfg.d_model),
+                             jnp.float32)
+    if cfg.frontend == "audio_stub":
+        out["audio"] = sds((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return out
+
+
+def params_specs(cfg):
+    return jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_specs(cfg, params_sd, opt_cfg):
+    return jax.eval_shape(lambda: adamw.init(opt_cfg, params_sd))
+
+
+def cache_specs(cfg, shape):
+    b, s = shape.global_batch, shape.seq_len
+    return jax.eval_shape(
+        lambda: T.init_decode_caches(cfg, b, s))
+
+
+def decode_input_specs(cfg, shape):
+    b = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    return {"token": sds((b,), jnp.int32), "t": sds((), jnp.int32)}
+
+
+def input_specs(cfg, shape, mesh, opt_cfg=None):
+    """Everything the step function needs: (args, in_shardings) pytrees.
+
+    train: (params, opt_state, batch); decode: (params, caches, token, t).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    params_sd = params_specs(cfg)
+    p_sh = SH.param_shardings(params_sd, mesh,
+                              fsdp=cfg.param_fsdp or shape.phase == "train")
+    if shape.phase == "train":
+        opt_cfg = opt_cfg or default_opt_config(cfg)
+        opt_sd = opt_specs(cfg, params_sd, opt_cfg)
+        o_sh = opt_shardings(opt_sd, params_sd, p_sh, mesh)
+        batch_sd = batch_specs(cfg, shape)
+        b_sh = SH.batch_shardings(batch_sd, mesh)
+        return (params_sd, opt_sd, batch_sd), (p_sh, o_sh, b_sh)
+    cache_sd = cache_specs(cfg, shape)
+    c_sh = SH.cache_shardings(cache_sd, mesh)
+    if shape.phase == "prefill":
+        # full-prompt forward filling the caches
+        batch_sd = batch_specs(cfg, shape)
+        b_sh = SH.batch_shardings(batch_sd, mesh)
+        return (params_sd, cache_sd, batch_sd), (p_sh, c_sh, b_sh)
+    dec = decode_input_specs(cfg, shape)
+    repl = NamedSharding(mesh, P())
+    tok_sh = SH.batch_shardings({"token": dec["token"]}, mesh)["token"]
+    return ((params_sd, cache_sd, dec["token"], dec["t"]),
+            (p_sh, c_sh, tok_sh, repl))
+
+
+def opt_shardings(opt_sd, params_sd, p_sh, mesh):
+    """Moments mirror the param shardings; scalars replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    repl = NamedSharding(mesh, P())
+    out = {"step": repl,
+           "mu": jax.tree_util.tree_map(lambda s: s, p_sh),
+           "nu": jax.tree_util.tree_map(lambda s: s, p_sh)}
+    if "err" in opt_sd:
+        out["err"] = jax.tree_util.tree_map(lambda s: s, p_sh)
+    return out
+
+
+def default_opt_config(cfg):
+    big = cfg.param_count() > 5e10
+    return adamw.OptConfig(moment_dtype="bfloat16" if big else "float32")
+
+
+def moe_group_size(cfg, shape, mesh) -> int:
+    """Bound the MoE dispatch transient: tokens are processed in groups so
+    the (E, C, D) buffer stays O(group x top_k x cf) per device."""
+    if cfg.moe is None:
+        return 0
+    dp = SH.axis_size(mesh, SH.dp_axes(mesh))
+    tokens_per_shard = shape.global_batch * shape.seq_len // max(dp, 1)
+    return int(min(tokens_per_shard, 8192))

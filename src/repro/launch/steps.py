@@ -1,0 +1,36 @@
+"""Step functions (train / serve) shared by the trainer, server and dry-run."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def make_train_step(cfg, opt_cfg, *, moe_group: int = 0):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: T.train_loss(p, cfg, batch, moe_group=moe_group),
+            has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw.update(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_serve_step(cfg):
+    def serve_step(params, caches, token, t):
+        logits, caches = T.decode_step(params, cfg, caches, token, t)
+        return logits, caches
+    return serve_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, caches, batch):
+        logits, caches = T.prefill(params, cfg, batch, caches)
+        return logits, caches
+    return prefill_step

@@ -1,0 +1,271 @@
+"""Recurrent sequence mixers: RWKV6 ("Finch") and RG-LRU (Griffin).
+
+RWKV6 time-mix uses the chunkwise-parallel linear-attention form: within a
+chunk the decay-weighted attention matrix is materialized (all exponents are
+<= 0, so it is numerically safe in f32); across chunks a (B,H,N,N) state is
+carried by lax.scan. RG-LRU is a first-order linear recurrence computed with
+``lax.associative_scan``. Both have O(1)-state decode steps, which is what
+makes the long_500k shapes feasible for these families.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+RWKV_LORA = 32
+DECAY_LORA = 64
+
+
+# ===================================================================== #
+# RWKV6 time mix
+# ===================================================================== #
+def init_rwkv6(key, cfg, n_layers: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    nh = d // n
+    ks = jax.random.split(key, 16)
+    p = {
+        # token-shift mixing coefficients (base + low-rank data-dependent)
+        "mu": jnp.zeros((5, d), jnp.float32),                 # w,k,v,r,g
+        "mu_x": jnp.zeros((d,), jnp.float32),
+        "lora_a": L.dense_init(ks[0], (5, d, RWKV_LORA), dtype=jnp.float32),
+        "lora_b": L.dense_init(ks[1], (5, RWKV_LORA, d), dtype=jnp.float32),
+        # decay: base + lora
+        "w_base": jnp.asarray(
+            np.tile(-6.0 + 5.0 * (np.arange(n) / max(n - 1, 1)) ** 0.9, nh),
+            jnp.float32),                                      # (d,)
+        "w_lora_a": L.dense_init(ks[2], (d, DECAY_LORA), dtype=jnp.float32),
+        "w_lora_b": L.dense_init(ks[3], (DECAY_LORA, d), dtype=jnp.float32),
+        "wr": L.dense_init(ks[4], (d, d), dtype=dtype),
+        "wk": L.dense_init(ks[5], (d, d), dtype=dtype),
+        "wv": L.dense_init(ks[6], (d, d), dtype=dtype),
+        "wg": L.dense_init(ks[7], (d, d), dtype=dtype),
+        "wo": L.dense_init(ks[8], (d, d),
+                           scale=1.0 / np.sqrt(2 * n_layers), dtype=dtype),
+        "u": jnp.zeros((nh, n), jnp.float32),                  # bonus
+        "ln_out": {"scale": jnp.zeros((d,), jnp.float32),
+                   "bias": jnp.zeros((d,), jnp.float32)},
+    }
+    return p
+
+
+def _rwkv6_projections(x, x_prev, p):
+    """Token-shift + data-dependent interpolation -> r,k,v,g,w_log."""
+    dx = x_prev - x                                            # (B,S,D)
+    xx = x + dx * p["mu_x"].astype(x.dtype)
+    # 5 low-rank mixes at once: (B,S,5,D)
+    hid = jnp.tanh(jnp.einsum("bsd,cdr->bscr", xx, p["lora_a"].astype(x.dtype)))
+    mix = jnp.einsum("bscr,crd->bscd", hid, p["lora_b"].astype(x.dtype))
+    mix = mix + p["mu"].astype(x.dtype)                        # (B,S,5,D)
+    xw, xk, xv, xr, xg = [x + dx * mix[:, :, i] for i in range(5)]
+    r = xr @ p["wr"]
+    k = xk @ p["wk"]
+    v = xv @ p["wv"]
+    g = jax.nn.silu(xg @ p["wg"])
+    w_raw = (p["w_base"].astype(jnp.float32)
+             + jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"])
+    w_log = -jnp.exp(w_raw)                                    # log decay <= 0
+    return r, k, v, g, w_log
+
+
+def rwkv6_chunked(r, k, v, w_log, u, state, chunk: int = 32):
+    """Chunkwise-parallel WKV6. r/k/v: (B,S,H,N) (any float), w_log (B,S,H,N)
+    f32 (<=0), u (H,N), state (B,H,N,N) f32. Returns (out (B,S,H,N) f32,
+    new_state)."""
+    b, s, h, n = r.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rc = r.astype(jnp.float32).reshape(b, nc, chunk, h, n)
+    kc = k.astype(jnp.float32).reshape(b, nc, chunk, h, n)
+    vc = v.astype(jnp.float32).reshape(b, nc, chunk, h, n)
+    wc = w_log.reshape(b, nc, chunk, h, n)
+
+    def step(S, inp):
+        rr, kk, vv, ww = inp                                   # (B,C,H,N)
+        la = jnp.cumsum(ww, axis=1)                            # (B,C,H,N) <=0
+        la_prev = la - ww                                      # exclusive
+        la_end = la[:, -1:]                                    # (B,1,H,N)
+        # inter-chunk: out_i += (r_i * exp(la_prev_i)) @ S
+        r_dec = rr * jnp.exp(la_prev)
+        out = jnp.einsum("bchn,bhnm->bchm", r_dec, S)
+        # intra-chunk: att[i,j] = sum_n r_i k_j exp(la_prev_i - la_j), j<i
+        dmat = jnp.exp(la_prev[:, :, None] - la[:, None, :, :])  # (B,C,C,H,N)
+        att = jnp.einsum("bihn,bjhn,bijhn->bijh", rr, kk, dmat)
+        ii = jnp.arange(chunk)
+        att = att * (ii[:, None] > ii[None, :])[None, :, :, None]
+        out = out + jnp.einsum("bijh,bjhn->bihn", att, vv)
+        # bonus diagonal term: r_i (u * k_i) v_i
+        diag = jnp.einsum("bchn,bchn->bch", rr, kk * u[None, None])
+        out = out + diag[..., None] * vv
+        # state update: S' = diag(exp(la_end)) S + sum_j exp(la_end - la_j) k_j v_j^T
+        k_dec = kk * jnp.exp(la_end - la)
+        S_new = jnp.exp(la_end[:, 0])[..., None] * S + \
+            jnp.einsum("bchn,bchm->bhnm", k_dec, vv)
+        return S_new, out
+
+    xs = (rc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), wc.transpose(1, 0, 2, 3, 4))
+    state_f, outs = jax.lax.scan(step, state, xs)              # (nc,B,C,H,N)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, n)
+    return out, state_f
+
+
+def rwkv6_step(r, k, v, w_log, u, state):
+    """Single-token recurrence. r/k/v/w_log: (B,H,N); state (B,H,N,N)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    kv = jnp.einsum("bhn,bhm->bhnm", kf, vf)
+    out = jnp.einsum("bhn,bhnm->bhm", rf, state + u[None, ..., None] * kv)
+    state = jnp.exp(w_log)[..., None] * state + kv
+    return out, state
+
+
+def rwkv6_forward(x, p, cfg, *, state=None, x_last=None, chunk: int = 32):
+    """Full time-mix block. x (B,S,D).
+
+    state/x_last: decode carries ((B,H,N,N) f32, (B,D)). Returns
+    (out, (state, x_last)).
+    """
+    b, s, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+    if x_last is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_prev = jnp.concatenate([x_last[:, None].astype(x.dtype), x[:, :-1]], 1)
+    r, k, v, g, w_log = _rwkv6_projections(x, x_prev, p)
+    rh = r.reshape(b, s, h, n)
+    kh = k.reshape(b, s, h, n)
+    vh = v.reshape(b, s, h, n)
+    wh = w_log.reshape(b, s, h, n)
+    if s == 1:
+        o, state = rwkv6_step(rh[:, 0], kh[:, 0], vh[:, 0], wh[:, 0],
+                              p["u"], state)
+        o = o[:, None]
+    else:
+        c = chunk if s % chunk == 0 else int(np.gcd(s, chunk))
+        o, state = rwkv6_chunked(rh, kh, vh, wh, p["u"], state, chunk=max(c, 1))
+        o = o.reshape(b, s, h, n)
+    o2 = o.reshape(b, s, d)
+    o2 = L.layernorm(o2.astype(x.dtype), p["ln_out"]["scale"],
+                     p["ln_out"]["bias"])                      # group-norm approx
+    out = (o2 * g) @ p["wo"]
+    return out, (state, x[:, -1].astype(jnp.float32))
+
+
+def init_rwkv6_cmix(key, cfg, n_layers: int, dtype=jnp.bfloat16):
+    """RWKV channel-mix (squared-relu FFN with token shift)."""
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), jnp.float32),
+        "wk": L.dense_init(ks[0], (d, f), dtype=dtype),
+        "wv": L.dense_init(ks[1], (f, d),
+                           scale=1.0 / np.sqrt(2 * n_layers), dtype=dtype),
+    }
+
+
+def rwkv6_cmix(x, p, *, x_last=None):
+    if x_last is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_prev = jnp.concatenate([x_last[:, None].astype(x.dtype), x[:, :-1]], 1)
+    xk = x + (x_prev - x) * p["mu_k"].astype(x.dtype)
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return h @ p["wv"], x[:, -1].astype(jnp.float32)
+
+
+# ===================================================================== #
+# RG-LRU (Griffin / RecurrentGemma)
+# ===================================================================== #
+CONV_WIDTH = 4
+LRU_C = 8.0
+
+
+def init_rglru(key, cfg, n_layers: int, dtype=jnp.bfloat16):
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in": L.dense_init(ks[0], (d, w), dtype=dtype),
+        "w_gate": L.dense_init(ks[1], (d, w), dtype=dtype),
+        "conv": (jax.random.normal(ks[2], (CONV_WIDTH, w), jnp.float32)
+                 * 0.1).astype(jnp.float32),
+        "w_a": L.dense_init(ks[3], (w, w), dtype=dtype),       # recurrence gate
+        "w_x": L.dense_init(ks[4], (w, w), dtype=dtype),       # input gate
+        # Λ s.t. a = exp(-c·softplus(Λ)) spans [0.9, 0.999] at r=1
+        "lam": jnp.asarray(
+            np.log(np.expm1(-np.log(np.linspace(0.9, 0.999, w)) / LRU_C)),
+            jnp.float32),
+        "w_out": L.dense_init(ks[5], (w, d),
+                              scale=1.0 / np.sqrt(2 * n_layers), dtype=dtype),
+    }
+
+
+def _causal_conv1d(x, kernel, conv_state=None):
+    """Depthwise causal conv. x (B,S,W), kernel (CW,W).
+
+    conv_state: (B, CW-1, W) previous inputs for decode. Returns (y, new_state).
+    """
+    b, s, w = x.shape
+    cw = kernel.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((b, cw - 1, w), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                     # (B,S+CW-1,W)
+    kern = kernel.astype(x.dtype)
+    y = sum(xp[:, i:i + s] * kern[i] for i in range(cw))
+    return y, xp[:, -(cw - 1):].astype(jnp.float32)
+
+
+def rglru_scan(x, a_log, h0):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) x_t via associative scan.
+
+    x (B,S,W) f32, a_log (B,S,W) f32 (log a_t <= 0), h0 (B,W) f32.
+    """
+    a = jnp.exp(a_log)
+    b_term = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * a_log), 1e-12)) * x
+    # fold initial state into first element
+    b_term = b_term.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b_term), axis=1)
+    return hh, hh[:, -1]
+
+
+def rglru_forward(x, p, cfg, *, state=None):
+    """Griffin recurrent block. x (B,S,D).
+
+    state: dict(h (B,W) f32, conv (B,CW-1,W) f32) or None.
+    Returns (out, new_state).
+    """
+    b, s, d = x.shape
+    w = cfg.lru_width
+    if state is None:
+        state = {"h": jnp.zeros((b, w), jnp.float32),
+                 "conv": jnp.zeros((b, CONV_WIDTH - 1, w), jnp.float32)}
+    gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)      # (B,S,W)
+    u = x @ p["w_in"]
+    u, conv_state = _causal_conv1d(u, p["conv"], state["conv"])
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(u @ p["w_a"]).astype(jnp.float32)       # recurrence gate
+    i = jax.nn.sigmoid(u @ p["w_x"]).astype(jnp.float32)       # input gate
+    a_log = -LRU_C * jax.nn.softplus(p["lam"]) * r             # (B,S,W) <= 0
+    xin = i * uf
+    if s == 1:
+        a = jnp.exp(a_log[:, 0])
+        h = a * state["h"] + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * xin[:, 0]
+        y = h[:, None]
+        h_last = h
+    else:
+        y, h_last = rglru_scan(xin, a_log, state["h"])
+    out = (y.astype(x.dtype) * gate) @ p["w_out"]
+    return out, {"h": h_last, "conv": conv_state}

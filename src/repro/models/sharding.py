@@ -1,0 +1,231 @@
+"""Logical sharding rules: name-based parameter specs + activation constraints.
+
+The model code calls ``constrain(x, *logical_axes)`` at key points; when no
+mesh context is active (unit tests, single device) this is a no-op, so the
+same model code runs everywhere. ``param_shardings`` assigns Megatron-style
+TP + FSDP specs by parameter name with divisibility fallbacks, which is what
+lets one rule set cover kv_heads ∈ {1,4,8,12,28,32,48,128} and every family.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+
+def current_mesh():
+    return getattr(_CTX, "mesh", None)
+
+
+def current_layout() -> str:
+    return getattr(_CTX, "layout", "2d")
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, layout: str = "2d"):
+    prev = getattr(_CTX, "mesh", None)
+    prev_layout = getattr(_CTX, "layout", "2d")
+    _CTX.mesh = mesh
+    _CTX.layout = layout
+    try:
+        yield
+    finally:
+        _CTX.mesh = prev
+        _CTX.layout = prev_layout
+
+
+def axis_size(mesh, name) -> int:
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([axis_size(mesh, n) for n in name]))
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def dp_axes(mesh, layout: str = None):
+    """Batch axes. 2d: ('pod','data'); fsdp: every mesh axis (pure DP)."""
+    layout = layout or current_layout()
+    names = ("pod", "data", "model") if layout == "fsdp" else ("pod", "data")
+    return tuple(a for a in names if a in mesh.shape)
+
+
+def _fits(dim: int, mesh, axis) -> bool:
+    n = axis_size(mesh, axis)
+    return n > 1 and dim % n == 0
+
+
+def constrain(x, *axes):
+    """axes: one entry per dim; each is None, an axis name, a tuple of axis
+    names, or 'dp' (expands to the mesh's batch axes). Applies the constraint
+    only for dims where the sharding divides; otherwise that dim is None."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    fsdp = current_layout() == "fsdp"
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None or (fsdp and ax == "model"):
+            spec.append(None)              # fsdp layout: no tensor parallel
+            continue
+        ax = dp_axes(mesh) if ax == "dp" else ax
+        spec.append(ax if _fits(dim, mesh, ax) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+# --------------------------------------------------------------------- #
+# parameter sharding rules
+# --------------------------------------------------------------------- #
+# name -> ordered (dim_from_right, axis) preferences; first divisible wins
+# per axis. dims are negative indices so stacked leading layer dims are
+# transparent.
+_RULES = {
+    "embed":    [(-2, "model"), (-1, "data")],
+    "pos_embed": [(-1, "data")],
+    "lm_head":  [(-1, "model"), (-2, "data")],
+    "wq":       [(-2, "model"), (-1, "model"), (-3, "data")],
+    "wk":       [(-2, "model"), (-1, "model"), (-3, "data")],
+    "wv":       [(-2, "model"), (-1, "model"), (-3, "data")],
+    "wo":       [(-3, "model"), (-1, "data"), (-2, "model")],   # attn out (H,hd,D)
+    "wi":       [(-1, "model"), (-2, "data"), (-3, "model")],   # mlp/moe in
+    "wg":       [(-1, "model"), (-2, "data"), (-3, "model")],
+    "router":   [(-2, "data")],
+    "wq_a":     [(-1, "model"), (-2, "data")],
+    "wq_b":     [(-2, "model"), (-3, "data")],
+    "wkv_a":    [(-2, "data")],
+    "wkv_b":    [(-2, "model"), (-3, "data")],
+    "wr":       [(-1, "model"), (-2, "data")],
+    "w_in":     [(-1, "model"), (-2, "data")],
+    "w_gate":   [(-1, "model"), (-2, "data")],
+    "w_a":      [(-1, "model"), (-2, "data")],
+    "w_x":      [(-1, "model"), (-2, "data")],
+    "w_out":    [(-2, "model"), (-1, "data")],
+}
+# mlp/cmix "wo"-like (F, D) and rwkv square (D, D) output projections
+_RULES_2D_OUT = [(-2, "model"), (-1, "data")]
+
+
+_COL_2D = [(-1, "model"), (-2, "data")]                        # (D, F) col-parallel
+# routed experts: E over 'model' (expert parallelism), D/F over 'data'
+_MOE_IN = [(-3, "model"), (-2, "data")]                        # (E, D, F)
+_MOE_OUT = [(-3, "model"), (-1, "data")]                       # (E, F, D)
+
+
+def _spec_for(path_names, shape, mesh, fsdp: bool = True) -> P:
+    name = path_names[-1]
+    rules = _RULES.get(name)
+    if "tmix" in path_names:                                   # rwkv square projs
+        rules = _RULES_2D_OUT if name == "wo" else _COL_2D
+    elif "cmix" in path_names:                                 # rwkv channel mix
+        rules = _COL_2D if name == "wk" else _RULES_2D_OUT
+    elif "moe" in path_names and "shared" not in path_names:
+        if name in ("wi", "wg"):
+            rules = _MOE_IN
+        elif name == "wo":
+            rules = _MOE_OUT
+    elif name == "wo" and len(shape) - _n_stack(path_names) == 2:
+        rules = _RULES_2D_OUT
+    if rules is None:
+        return P()                                             # replicate
+    spec = [None] * len(shape)
+    used_axes = set()
+    for dim, ax in rules:
+        if ax == "data" and not fsdp:
+            continue                   # resident weights: no FSDP sharding
+        idx = len(shape) + dim
+        if idx < 0 or idx >= len(shape):
+            continue
+        if spec[idx] is not None or ax in used_axes:
+            continue
+        if _fits(shape[idx], mesh, ax):
+            spec[idx] = ax
+            used_axes.add(ax)
+    return P(*spec)
+
+
+def _n_stack(path_names) -> int:
+    """Number of leading stacked dims (params inside a scanned stage)."""
+    return 1 if any(p.startswith("stage") for p in path_names) else 0
+
+
+def _path_names(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(f"i{p.idx}")
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+def param_shardings(params, mesh: Mesh, fsdp: bool = True):
+    """Pytree of NamedShardings matching ``params`` (arrays or ShapeDtype).
+
+    fsdp=False keeps weights resident (no 'data'-axis sharding) — zero
+    per-step weight gathers, the serving layout for small archs."""
+    def assign(path, leaf):
+        names = _path_names(path)
+        spec = _spec_for(names, leaf.shape, mesh, fsdp)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def cache_shardings(cache, mesh: Mesh):
+    """Decode caches: batch over dp axes, long (seq) dims over 'model'.
+
+    Layout conventions (see attention.py / recurrent.py):
+      k/v        (..., B, S, kv, hd)  -> B@dp, S@model
+      ckv/krope  (..., B, S, r)       -> B@dp, S@model
+      state      (..., B, H, N, N)    -> B@dp, H@model
+      h          (..., B, W)          -> B@dp, W@model
+      conv       (..., B, CW-1, W)    -> B@dp, W@model
+      pos        (W,)                 -> replicated
+      xk/xv      (..., B, Se, kv, hd) -> B@dp
+    """
+    dp = dp_axes(mesh)
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape
+        nlead = len(shape)
+        spec = [None] * nlead
+        def set_if(idx, ax):
+            if 0 <= idx < nlead and spec[idx] is None and _fits(shape[idx], mesh, ax):
+                spec[idx] = ax
+        if name in ("k", "v"):
+            set_if(nlead - 4, dp)
+            set_if(nlead - 3, "model")
+        elif name in ("ckv", "krope"):
+            set_if(nlead - 3, dp)
+            set_if(nlead - 2, "model")
+        elif name in ("xk", "xv"):
+            set_if(nlead - 4, dp)
+        elif name == "state":
+            set_if(nlead - 4, dp)
+            set_if(nlead - 3, "model")
+        elif name in ("h", "x_last_t", "x_last_c"):
+            set_if(nlead - 2, dp)
+            set_if(nlead - 1, "model")
+        elif name == "conv":
+            set_if(nlead - 3, dp)
+            set_if(nlead - 1, "model")
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(assign, cache)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    """Inputs: first dim over dp axes (when divisible)."""
+    dp = dp_axes(mesh)
+
+    def assign(leaf):
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1 and _fits(leaf.shape[0], mesh, dp):
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(assign, batch)

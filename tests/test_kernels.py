@@ -1,0 +1,106 @@
+"""Per-kernel allclose sweeps (shapes x dtypes) against the ref.py oracles,
+executed with pallas interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,ss", [(256, 128, 256, 1), (128, 256, 384, 3),
+                                      (384, 128, 128, 4)])
+def test_sliced_matmul(m, k, n, ss, dtype):
+    k1, k2 = jax.random.split(KEY)
+    a, b = rand(k1, (m, k), dtype), rand(k2, (k, n), dtype)
+    out = ops.sliced_matmul(a, b, slice_size=ss)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref.matmul(a, b), np.float32),
+        **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("run_a,run_b", [(1, 1), (2, 1), (1, 3)])
+def test_coschedule(run_a, run_b, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    a, b = rand(k1, (256, 128), dtype), rand(k2, (128, 256), dtype)
+    x = rand(k3, (1024, 256), dtype)
+    mm, st = ops.coschedule(a, b, x, run_a=run_a, run_b=run_b)
+    mref, sref = ref.coschedule(a, b, x, 2.0)
+    np.testing.assert_allclose(np.asarray(mm, np.float32),
+                               np.asarray(mref, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(st, np.float32),
+                               np.asarray(sref, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,s,d,causal", [(1, 2, 256, 64, True),
+                                            (2, 1, 128, 128, True),
+                                            (1, 2, 256, 64, False)])
+def test_flash_attention(b, h, s, d, causal, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (b, h, s, d), dtype)
+    k = rand(ks[1], (b, h, s, d), dtype)
+    v = rand(ks[2], (b, h, s, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, bq=128, bk=128)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,n,chunk", [(2, 64, 2, 32, 16),
+                                           (1, 128, 4, 64, 32)])
+def test_rwkv6_scan(b, s, h, n, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    r = rand(ks[0], (b, s, h, n), dtype)
+    k = rand(ks[1], (b, s, h, n), dtype)
+    v = rand(ks[2], (b, s, h, n), dtype)
+    w_log = -jnp.exp(rand(ks[3], (b, s, h, n), jnp.float32) - 1.0)
+    u = rand(ks[4], (h, n), jnp.float32) * 0.1
+    out = ops.rwkv6_scan(r, k, v, w_log, u, chunk=chunk)
+    want, _ = ref.rwkv6(r, k, v, w_log, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-3,
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-3)
+
+
+@pytest.mark.parametrize("b,s,w,chunk,bw", [(2, 256, 512, 64, 256),
+                                            (1, 128, 1024, 128, 512)])
+def test_rg_lru(b, s, w, chunk, bw):
+    ks = jax.random.split(KEY, 2)
+    x = rand(ks[0], (b, s, w), jnp.float32)
+    a_log = -jnp.exp(rand(ks[1], (b, s, w), jnp.float32))
+    out = ops.rg_lru(x, a_log, chunk=chunk, bw=bw)
+    want = ref.rg_lru(x, a_log)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_kernels_match_model_layers():
+    """Pallas rwkv6 kernel agrees with the model's chunked implementation."""
+    from repro.models import recurrent as R
+    ks = jax.random.split(KEY, 5)
+    b, s, h, n = 2, 64, 2, 32
+    r = rand(ks[0], (b, s, h, n), jnp.float32)
+    k = rand(ks[1], (b, s, h, n), jnp.float32)
+    v = rand(ks[2], (b, s, h, n), jnp.float32)
+    w_log = -jnp.exp(rand(ks[3], (b, s, h, n), jnp.float32) - 1.0)
+    u = rand(ks[4], (h, n), jnp.float32) * 0.1
+    state = jnp.zeros((b, h, n, n), jnp.float32)
+    want, _ = R.rwkv6_chunked(r, k, v, w_log, u, state, chunk=16)
+    got = ops.rwkv6_scan(r, k, v, w_log, u, chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
