@@ -1,0 +1,20 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-fast bench clean-cache
+
+# tier-1 verification (ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -x -q
+
+# CI smoke: every benchmark at reduced instance/round counts
+bench-fast:
+	$(PYTHON) -m benchmarks.run --fast
+
+# full paper-figure sweep (JSON artifacts under artifacts/bench/)
+bench:
+	$(PYTHON) -m benchmarks.run
+
+# drop persisted IPC measurements (content-addressed; safe to delete)
+clean-cache:
+	rm -rf artifacts/ipc_cache

@@ -1,0 +1,109 @@
+"""Decision-latency micro-bench: how much does a scheduling decision cost?
+
+The paper's premise (and the premise of Pai et al. / Chen et al. on runtime
+GPU sharing) is that online decisions must be micro- to millisecond scale,
+with all heavy measurement pushed to pre-execution. This bench records the
+current cost of each stage of the decision path so future PRs have a perf
+trajectory to compare against:
+
+  * ``cold_find_us``   — first ``find_coschedule`` on a fresh scheduler
+                         (model mode: Markov solves for every candidate).
+  * ``warm_find_us``   — same active set again (memoized decision).
+  * ``oracle_cold_find_us`` / ``oracle_warm_find_us`` — decision on
+                         measured IPCs: cold includes the batched simulator
+                         sweep (or a disk-cache hit), warm is the memo hit.
+  * ``pair_measure_*`` — raw per-pair measurement cost, scalar vs batched
+                         row (the IPC-table build rate).
+
+Run directly (``python -m benchmarks.decision_latency``) or via
+``benchmarks.run`` which persists the JSON artifact.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+
+import numpy as np
+
+from repro.core.calibrate import calibrated_benchmarks
+from repro.core.profiles import C2050, WORKLOADS
+from repro.core.scheduler import KerneletScheduler
+from repro.core.simulator import IPCTable, simulate, simulate_many
+
+MEASURE_ROUNDS = 12000
+
+
+def _time_us(fn, repeat: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def bench(rounds: int = MEASURE_ROUNDS) -> dict:
+    gpu = C2050
+    vg = gpu.virtual()
+    profs = calibrated_benchmarks(gpu)
+    names = WORKLOADS["ALL"]
+
+    # ---- decision latency, model mode (the online Kernelet path) ---- #
+    sched = KerneletScheduler(gpu, profs)
+    t0 = time.perf_counter()
+    sched.find_coschedule(names)
+    cold_find_us = (time.perf_counter() - t0) * 1e6
+    warm_find_us = _time_us(lambda: sched.find_coschedule(names))
+
+    # ---- decision latency, oracle mode (measured IPC tables) ---- #
+    table = IPCTable(vg, rounds=rounds, persist=False)
+    osched = KerneletScheduler(gpu, profs, decision_table=table)
+    t0 = time.perf_counter()
+    osched.find_coschedule(names)
+    oracle_cold_find_us = (time.perf_counter() - t0) * 1e6
+    oracle_warm_find_us = _time_us(lambda: osched.find_coschedule(names))
+
+    # ---- raw measurement cost: scalar pair vs batched row ---- #
+    pa, pb = profs["PC"], profs["TEA"]
+    t0 = time.perf_counter()
+    simulate([pa, pb], [2, 2], vg, rounds=rounds)
+    pair_measure_scalar_us = (time.perf_counter() - t0) * 1e6
+    W = vg.units_per_sm
+    row = []
+    for a, b in itertools.combinations(sorted(profs), 2):
+        qa, qb = profs[a], profs[b]
+        for w1 in range(1, W):
+            w2 = min(W - w1, qb.active_units(vg))
+            if w1 > qa.active_units(vg) or w2 < 1:
+                continue
+            row.append(([qa, qb], [w1, w2]))
+    t0 = time.perf_counter()
+    simulate_many(row, vg, rounds=rounds)
+    batch_dt = time.perf_counter() - t0
+    pair_measure_batched_us = batch_dt / len(row) * 1e6
+
+    rec = {
+        "rounds": rounds,
+        "n_batch_configs": len(row),
+        "cold_find_us": round(cold_find_us, 1),
+        "warm_find_us": round(warm_find_us, 1),
+        "oracle_cold_find_us": round(oracle_cold_find_us, 1),
+        "oracle_warm_find_us": round(oracle_warm_find_us, 1),
+        "pair_measure_scalar_us": round(pair_measure_scalar_us, 1),
+        "pair_measure_batched_us": round(pair_measure_batched_us, 1),
+        "batch_speedup": round(
+            pair_measure_scalar_us / max(pair_measure_batched_us, 1e-9), 1),
+    }
+    rec["headline"] = {
+        "warm_find_us": rec["warm_find_us"],
+        "pair_measure_batched_us": rec["pair_measure_batched_us"],
+        "batch_speedup": rec["batch_speedup"],
+        "claim": "online decisions are memo hits; measurement is batched "
+                 "pre-execution",
+    }
+    return rec
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(bench(), indent=1))

@@ -5,6 +5,7 @@ returns a JSON-serializable record with a ``headline`` validation metric.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import time
 
@@ -16,15 +17,26 @@ from repro.core.markov import MarkovModel, balanced_slice_sizes, \
 from repro.core.profiles import C2050, GTX680, WORKLOADS
 from repro.core.queue import make_workload, run_policy
 from repro.core.scheduler import KerneletScheduler
-from repro.core.simulator import IPCTable, simulate
+from repro.core.simulator import IPCTable
 from repro.core import slicing
 
 GPUS = (C2050, GTX680)
 SIM_ROUNDS = 16000
 
 
+@functools.lru_cache(maxsize=8)
 def _table(gpu):
+    """One shared measurement table per GPU for the whole bench process
+    (entries also persist on disk via the content-addressed IPC cache)."""
     return IPCTable(gpu.virtual(), rounds=SIM_ROUNDS)
+
+
+def _prefilled_table(gpu):
+    """Shared table with the paper's pre-execution step done: the full
+    solo + ordered-pair-split table measured in one batched sweep."""
+    truth = _table(gpu)
+    truth.prefill(calibrated_benchmarks(gpu))
+    return truth
 
 
 # ------------------------------------------------------------------ #
@@ -59,17 +71,20 @@ def fig7_single_ipc():
         vg = gpu.virtual()
         profs = calibrated_benchmarks(gpu)
         model = MarkovModel(vg, three_state=True)
+        names = sorted(profs)
+        items = [(profs[n], profs[n].active_units(vg)) for n in names]
+        # one batched (and persistently cached) sweep per seed
+        per_seed = [IPCTable(vg, seed=s, rounds=SIM_ROUNDS).solo_many(items)
+                    for s in (0, 1)]
+        sims = np.mean(np.asarray(per_seed), axis=0)
         rows = {}
         errs = []
-        for name, p in profs.items():
-            w = p.active_units(vg)
-            sim = np.mean([simulate([p], [w], vg, rounds=SIM_ROUNDS,
-                                    seed=s).ipcs[0] for s in (0, 1)])
+        for (p, w), sim in zip(items, sims):
             mdl = model.single_ipc(p, w)
             scale = gpu.peak_eff / vg.peak_ipc     # report on paper axis
-            rows[name] = {"measured": round(float(sim * scale), 4),
-                          "predicted": round(float(mdl * scale), 4),
-                          "table4": p.pur}
+            rows[p.name] = {"measured": round(float(sim * scale), 4),
+                            "predicted": round(float(mdl * scale), 4),
+                            "table4": p.pur}
             errs.append(abs(sim - mdl) * scale)
         rec[gpu.name] = {"kernels": rows,
                          "mean_abs_err": round(float(np.mean(errs)), 4)}
@@ -86,9 +101,9 @@ def _pair_rows(gpu, ratio: str):
     profs = calibrated_benchmarks(gpu)
     model = MarkovModel(vg, three_state=True)
     truth = _table(gpu)
-    rows = {}
-    errs = []
     W = vg.units_per_sm
+    # pass 1: model-side split choice per pair (memoized Markov solves)
+    chosen = []
     for a, b in itertools.combinations(sorted(profs), 2):
         pa, pb = profs[a], profs[b]
         if ratio == "balanced":
@@ -108,7 +123,13 @@ def _pair_rows(gpu, ratio: str):
             wa = max(1, min(W // 2, pa.active_units(vg)))
             wb = max(1, min(W - wa, pb.active_units(vg)))
             cm = model.pair_ipc(pa, wa, pb, wb)
-        cs = truth.pair(pa, wa, pb, wb)
+        chosen.append((a, b, wa, wb, cm))
+    # pass 2: measure every chosen split in one batched sweep
+    measured = truth.pair_many([(profs[a], wa, profs[b], wb)
+                                for a, b, wa, wb, _ in chosen])
+    rows = {}
+    errs = []
+    for (a, b, wa, wb, cm), cs in zip(chosen, measured):
         rows[f"{a}+{b}"] = {
             "split": [wa, wb],
             "predicted": [round(float(x), 4) for x in cm],
@@ -146,11 +167,14 @@ def fig10_uncoalesced():
     profs = calibrated_benchmarks(gpu)
     m3 = MarkovModel(vg, three_state=True)
     m2 = MarkovModel(vg, three_state=False)     # merges mem_u into mem_c
+    truth = _table(gpu)
+    names = ("PC", "SPMV")
+    sims = truth.solo_many([(profs[n], profs[n].active_units(vg))
+                            for n in names])
     rows = {}
-    for name in ("PC", "SPMV"):
+    for name, sim in zip(names, sims):
         p = profs[name]
         w = p.active_units(vg)
-        sim = simulate([p], [w], vg, rounds=SIM_ROUNDS).ipcs[0]
         rows[name] = {"measured": round(float(sim), 4),
                       "with_uncoalesced": round(float(m3.single_ipc(p, w)), 4),
                       "coalesced_only": round(float(m2.single_ipc(p, w)), 4)}
@@ -169,12 +193,14 @@ def fig11_multischeduler():
     m_virt = MarkovModel(vg, three_state=True)
     m_raw = MarkovModel(dataclasses.replace(
         gpu, n_schedulers=1), three_state=True)   # no virtual reduction
+    truth = _table(gpu)
+    sims = dict(zip(profs, truth.solo_many(
+        [(p, p.active_units(vg)) for p in profs.values()])))
     rows = {}
     for name, p in profs.items():
         w_v = p.active_units(vg)
         w_r = p.active_units(gpu)
-        sim = simulate([p], [w_v], vg, rounds=SIM_ROUNDS).ipcs[0] \
-            * gpu.peak_eff / vg.peak_ipc
+        sim = sims[name] * gpu.peak_eff / vg.peak_ipc
         pred_v = m_virt.single_ipc(p, w_v) * gpu.peak_eff / vg.peak_ipc
         pred_r = m_raw.single_ipc(p, w_r)   # raw spec: peak_ipc = 8 scale
         rows[name] = {"measured": round(float(sim), 3),
@@ -196,18 +222,26 @@ def fig12_cp():
     profs = calibrated_benchmarks(gpu)
     model = MarkovModel(vg, three_state=True)
     truth = _table(gpu)
-    rows = {}
-    errs = []
     W = vg.units_per_sm
+    combos = []
     for a, b in itertools.combinations(sorted(profs), 2):
         pa, pb = profs[a], profs[b]
         wa = max(1, min(W // 2, pa.active_units(vg)))
         wb = max(1, min(W - wa, pb.active_units(vg)))
+        combos.append((a, b, wa, wb))
+    # batch-measure all solos and all pair splits in two sweeps
+    solo = dict(zip(sorted(profs), truth.solo_many(
+        [(profs[n], profs[n].active_units(vg)) for n in sorted(profs)])))
+    pair_meas = truth.pair_many([(profs[a], wa, profs[b], wb)
+                                 for a, b, wa, wb in combos])
+    rows = {}
+    errs = []
+    for (a, b, wa, wb), cs in zip(combos, pair_meas):
+        pa, pb = profs[a], profs[b]
         cp_m = co_scheduling_profit(
             (model.single_ipc(pa), model.single_ipc(pb)),
             model.pair_ipc(pa, wa, pb, wb))
-        cp_s = co_scheduling_profit(
-            (truth.solo(pa), truth.solo(pb)), truth.pair(pa, wa, pb, wb))
+        cp_s = co_scheduling_profit((solo[a], solo[b]), cs)
         rows[f"{a}+{b}"] = {"predicted": round(float(cp_m), 4),
                             "measured": round(float(cp_s), 4)}
         errs.append(abs(cp_m - cp_s))
@@ -221,7 +255,7 @@ def fig13_scheduling(instances: int = 1000):
     rec = {}
     for gpu in GPUS:
         profs = calibrated_benchmarks(gpu)
-        truth = _table(gpu)
+        truth = _prefilled_table(gpu)
         am = 0.1 if gpu.name == "C2050" else 0.105
         per_wl = {}
         for wl, names in WORKLOADS.items():
@@ -276,7 +310,7 @@ def fig14_mc_cdf(n_mc: int = 1000, instances: int = 50):
     """CDF of MC(1000) random schedules vs Kernelet (paper Fig. 14)."""
     gpu = C2050
     profs = calibrated_benchmarks(gpu)
-    truth = _table(gpu)
+    truth = _prefilled_table(gpu)
     order = make_workload(profs, WORKLOADS["MIX"], instances=instances)
     knl = run_policy("KERNELET", profs, order, gpu, truth).total_cycles
     rng = np.random.default_rng(0)

@@ -29,10 +29,11 @@ def main() -> None:
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks.paper_figs import ALL_FIGS
-    from benchmarks import tpu_coschedule
+    from benchmarks import decision_latency, tpu_coschedule
 
     benches = dict(ALL_FIGS)
     benches["tpu_coschedule"] = tpu_coschedule.bench
+    benches["decision_latency"] = decision_latency.bench
     if args.only:
         benches = {k: v for k, v in benches.items() if k == args.only}
 
@@ -43,6 +44,8 @@ def main() -> None:
             rec = fn(instances=100)
         elif args.fast and name == "fig14_mc_cdf":
             rec = fn(n_mc=100)
+        elif args.fast and name == "decision_latency":
+            rec = fn(rounds=2000)
         else:
             rec = fn()
         dt = time.time() - t0

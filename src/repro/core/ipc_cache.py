@@ -1,0 +1,129 @@
+"""Persistent, content-addressed store for simulator IPC measurements.
+
+The paper's "pre-execution" step measures kernel IPC tables once, offline;
+online scheduling then only reads them. This module gives the repro the
+same property across *processes*: every (GPUSpec, seed, rounds) triple maps
+to one JSON file whose entries are keyed by the content digest of the
+participating KernelProfiles plus their unit splits, so
+
+  * identical measurements are never re-simulated, no matter which
+    benchmark, test, or example asks first;
+  * any change to a profile field, the GPU spec, the seed, the round count,
+    or the simulator physics (``_SCHEMA``) silently misses and re-measures —
+    there is no way to read a stale value.
+
+Layout:  <cache_dir>/ipc_<gpu digest>_s<seed>_r<rounds>.json
+         {"solo": {"<prof>:<w>": ipc, ...},
+          "pair": {"<p1>:<w1>|<p2>:<w2>": [cipc1, cipc2], ...}}
+
+``cache_dir`` defaults to ``artifacts/ipc_cache`` under the current working
+directory and is overridable via the ``REPRO_IPC_CACHE`` environment
+variable; setting it to ``0``, ``off``, or ``none`` disables persistence
+entirely (in-memory caching still applies).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Optional
+
+from repro.core.profiles import GPUSpec, content_digest
+
+ENV_VAR = "REPRO_IPC_CACHE"
+DEFAULT_DIR = os.path.join("artifacts", "ipc_cache")
+
+# bump when simulator physics change in a way that alters measurements
+_SCHEMA = 1
+
+
+def cache_dir() -> Optional[str]:
+    """Resolved cache directory, or None when persistence is disabled."""
+    path = os.environ.get(ENV_VAR)
+    if path is None:
+        return DEFAULT_DIR
+    if path.strip().lower() in ("", "0", "off", "none", "disable"):
+        return None
+    return path
+
+
+def _entry_key(prof_ws) -> str:
+    return "|".join(f"{content_digest(p)}:{w}" for p, w in prof_ws)
+
+
+class IPCCache:
+    """One on-disk table per (gpu, seed, rounds); dirty-tracked JSON with
+    atomic writes so concurrent processes never see torn files."""
+
+    def __init__(self, gpu: GPUSpec, seed: int, rounds: int,
+                 path: Optional[str] = None):
+        base = path if path is not None else cache_dir()
+        if base is None:
+            self.path = None
+            self._data = {"solo": {}, "pair": {}}
+            self._dirty = False
+            return
+        fname = (f"ipc_v{_SCHEMA}_{content_digest(gpu)}"
+                 f"_s{seed}_r{rounds}.json")
+        self.path = os.path.join(base, fname)
+        self._data = self._load()
+        self._dirty = False
+
+    def _load(self) -> dict:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            if (isinstance(data, dict) and isinstance(data.get("solo"), dict)
+                    and isinstance(data.get("pair"), dict)):
+                return data
+        except (OSError, ValueError):
+            pass
+        return {"solo": {}, "pair": {}}
+
+    # ---- entry access ---- #
+    def get(self, kind: str, prof_ws):
+        """kind: 'solo' | 'pair'; prof_ws: [(profile, w), ...]. Returns the
+        cached float / (cipc1, cipc2) tuple, or None on miss."""
+        val = self._data[kind].get(_entry_key(prof_ws))
+        if val is None:
+            return None
+        return tuple(val) if kind == "pair" else float(val)
+
+    def put(self, kind: str, prof_ws, value) -> None:
+        self._data[kind][_entry_key(prof_ws)] = (
+            list(value) if kind == "pair" else float(value))
+        if self.path is not None:
+            self._dirty = True
+
+    def __len__(self) -> int:
+        return len(self._data["solo"]) + len(self._data["pair"])
+
+    # ---- persistence ---- #
+    def save(self) -> None:
+        if self.path is None or not self._dirty:
+            return
+        # merge with whatever a concurrent process wrote since our load:
+        # entries are content-addressed, so union is always valid
+        on_disk = self._load()
+        for kind in ("solo", "pair"):
+            merged = dict(on_disk[kind])
+            merged.update(self._data[kind])
+            self._data[kind] = merged
+        tmp = None
+        try:
+            os.makedirs(os.path.dirname(self.path), exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path),
+                                       suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._data, f)
+            os.replace(tmp, self.path)
+            self._dirty = False          # only a successful write settles it
+        except OSError:
+            # unwritable cache location: degrade to in-memory only (still
+            # dirty, so a later save() can retry) — persistence is an
+            # optimization, never a correctness dependency
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass

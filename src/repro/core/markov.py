@@ -90,6 +90,10 @@ class MarkovModel:
         # Fig. 10 ablation: 'wrongly assuming coalesced accesses only')
         self.gpu = gpu
         self.three_state = three_state
+        # KernelProfile is a frozen (hashable) dataclass, so solved IPCs are
+        # memoized per (profiles, splits) — benchmarks and the scheduler
+        # re-ask for the same configurations constantly
+        self._ipc_cache = {}
 
     def _classes(self, prof):
         cls = stall_classes(prof)
@@ -217,18 +221,30 @@ class MarkovModel:
     def single_ipc(self, prof: KernelProfile, w: Optional[int] = None) -> float:
         """Modeled IPC, Eq. 4 (scaled by peak_ipc to the paper's axis)."""
         w = w if w is not None else prof.active_units(self.gpu)
-        P, ready, rd = self._build([prof], [w])
-        pi = self._steady_state(P)
-        return float(pi @ ready[0]) / float(pi @ rd) * self.gpu.peak_ipc
+        key = (prof, w)
+        if key not in self._ipc_cache:
+            P, ready, rd = self._build([prof], [w])
+            pi = self._steady_state(P)
+            self._ipc_cache[key] = (float(pi @ ready[0]) / float(pi @ rd)
+                                    * self.gpu.peak_ipc)
+        return self._ipc_cache[key]
 
     def pair_ipc(self, p1: KernelProfile, w1: int, p2: KernelProfile,
                  w2: int):
         """(cIPC_1, cIPC_2), Eqs. 5-7."""
-        P, ready, rd = self._build([p1, p2], [w1, w2])
-        pi = self._steady_state(P)
-        cyc = float(pi @ rd)
-        return (float(pi @ ready[0]) / cyc * self.gpu.peak_ipc,
+        key = (p1, w1, p2, w2)
+        if key not in self._ipc_cache:
+            P, ready, rd = self._build([p1, p2], [w1, w2])
+            pi = self._steady_state(P)
+            cyc = float(pi @ rd)
+            self._ipc_cache[key] = (
+                float(pi @ ready[0]) / cyc * self.gpu.peak_ipc,
                 float(pi @ ready[1]) / cyc * self.gpu.peak_ipc)
+        return self._ipc_cache[key]
+
+    def pair_ipc_many(self, configs):
+        """configs: [(p1, w1, p2, w2)] -> [(cIPC_1, cIPC_2)] (memoized)."""
+        return [self.pair_ipc(*c) for c in configs]
 
 
 # --------------------------------------------------------------------- #

@@ -18,7 +18,18 @@ one "scheduler" whose units are in-flight Pallas grid slices).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import math
+
+
+def content_digest(spec) -> str:
+    """Short stable digest of a frozen dataclass's field values — the
+    content-addressing primitive for the on-disk IPC cache (two profiles or
+    GPU specs with identical fields share cached measurements)."""
+    payload = json.dumps(dataclasses.asdict(spec), sort_keys=True,
+                         default=repr)
+    return hashlib.sha1(payload.encode()).hexdigest()[:12]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -52,25 +52,29 @@ def make_workload(profiles: Dict[str, KernelProfile], names: List[str],
 
 
 class _Pending:
-    """Aggregated remaining blocks per kernel type."""
+    """Aggregated remaining blocks per kernel type. The queue order lives in
+    an insertion-ordered dict so retiring a drained kernel is O(1) instead
+    of an O(n) list scan per drain call."""
 
     def __init__(self, profiles, order):
         self.profiles = profiles
         self.blocks = {}
+        self._order = {}                     # queue order with dedup
         for n in order:
             self.blocks[n] = self.blocks.get(n, 0.0) + profiles[n].num_blocks
-        self.order = []
-        for n in order:                      # queue order with dedup
-            if n not in self.order:
-                self.order.append(n)
+            self._order.setdefault(n, None)
+
+    @property
+    def order(self):
+        return list(self._order)
 
     def active(self):
-        return [n for n in self.order if self.blocks.get(n, 0) > 0]
+        return [n for n in self._order if self.blocks.get(n, 0) > 0]
 
     def drain(self, name, blocks):
         self.blocks[name] = max(0.0, self.blocks[name] - blocks)
-        if self.blocks[name] <= 0 and name in self.order:
-            self.order.remove(name)
+        if self.blocks[name] <= 0:
+            self._order.pop(name, None)
 
 
 def _coexec_phase(p1, b1, p2, b2, c1, c2, s1, s2, gpu):

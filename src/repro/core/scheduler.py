@@ -59,6 +59,11 @@ class KerneletScheduler:
         self._solo_cache: Dict = {}
         self._pair_cache: Dict = {}
         self._minslice_cache: Dict = {}
+        # memoized decisions keyed on the frozen active set: successive
+        # run_policy / drain iterations with an unchanged pending set skip
+        # the search entirely (profiles are fixed for a scheduler's lifetime,
+        # so the active set fully determines the decision)
+        self._decision_cache: Dict = {}
 
     # ---- decision-side IPCs (model, or table for OPT) ---- #
     def solo_ipc(self, name: str, w: Optional[int] = None) -> float:
@@ -76,14 +81,24 @@ class KerneletScheduler:
     def pair_ipc(self, n1: str, w1: int, n2: str, w2: int):
         key = (n1, w1, n2, w2)
         if key not in self._pair_cache:
-            if self.decision_table is not None:
-                v = self.decision_table.pair(self.profiles[n1], w1,
-                                             self.profiles[n2], w2)
-            else:
-                v = self.model.pair_ipc(self.profiles[n1], w1,
-                                        self.profiles[n2], w2)
-            self._pair_cache[key] = v
+            self._eval_pairs([key])
         return self._pair_cache[key]
+
+    def _eval_pairs(self, keys) -> None:
+        """Evaluate a batch of (n1, w1, n2, w2) candidates into the pair
+        cache. In oracle mode the whole batch is measured in one
+        ``simulate_many`` sweep via ``IPCTable.pair_many``; in model mode
+        the (cheap, memoized) Markov solves run per candidate."""
+        missing = [k for k in keys if k not in self._pair_cache]
+        if not missing:
+            return
+        configs = [(self.profiles[n1], w1, self.profiles[n2], w2)
+                   for n1, w1, n2, w2 in missing]
+        if self.decision_table is not None:
+            vals = self.decision_table.pair_many(configs)
+        else:
+            vals = self.model.pair_ipc_many(configs)
+        self._pair_cache.update(zip(missing, vals))
 
     def min_slice(self, name: str) -> int:
         if name not in self._minslice_cache:
@@ -109,12 +124,43 @@ class KerneletScheduler:
         pairs = list(itertools.combinations(sorted(names), 2))
         return len(pairs) - len(self.prune(pairs))
 
+    def _prefetch_solo(self, names) -> None:
+        """Batch decision-side solo IPCs for every name not yet cached (one
+        simulate_many sweep in oracle mode)."""
+        todo = []
+        for n in names:
+            w = self.profiles[n].active_units(self.vgpu)
+            if (n, w) not in self._solo_cache:
+                todo.append((n, w))
+        if not todo:
+            return
+        if self.decision_table is not None:
+            vals = self.decision_table.solo_many(
+                [(self.profiles[n], w) for n, w in todo])
+            self._solo_cache.update(zip(todo, vals))
+        else:
+            for n, _ in todo:
+                self.solo_ipc(n)
+
     # ---- FindCoSchedule ---- #
     def find_coschedule(self, pending) -> Optional[CoSchedule]:
-        """pending: iterable of kernel names with blocks remaining."""
+        """pending: iterable of kernel names with blocks remaining.
+
+        Decisions are memoized on the active *set*: profiles are fixed, so
+        the pending names fully determine the result, and drain loops that
+        call this every iteration pay for the search only when the set
+        changes."""
         names = sorted(set(pending))
         if not names:
             return None
+        key = frozenset(names)
+        hit = self._decision_cache.get(key)
+        if hit is None:
+            hit = self._search(names)
+            self._decision_cache[key] = hit
+        return hit
+
+    def _search(self, names) -> CoSchedule:
         if len(names) == 1:
             n = names[0]
             w = self.profiles[n].active_units(self.vgpu)
@@ -132,25 +178,33 @@ class KerneletScheduler:
                     or abs(self.profiles[a].mur - self.profiles[b].mur) >= alpha_m]
             if alpha_p < 1e-4:
                 kept = pairs
-        best, best_cp = None, -np.inf
         W = self.vgpu.units_per_sm
+        # enumerate every candidate (pair, split) first, then evaluate the
+        # whole batch in one call (a single measurement sweep in oracle
+        # mode) before the cheap arithmetic selection pass
+        cand = []
         for a, b in kept:
-            pa, pb = self.profiles[a], self.profiles[b]
-            wa_max = pa.active_units(self.vgpu)
-            wb_max = pb.active_units(self.vgpu)
-            ia, ib = self.solo_ipc(a), self.solo_ipc(b)
+            wa_max = self.profiles[a].active_units(self.vgpu)
+            wb_max = self.profiles[b].active_units(self.vgpu)
             for wa in range(1, W):
                 wb = min(W - wa, wb_max)
                 if wa > wa_max or wb < 1:
                     continue
-                c1, c2 = self.pair_ipc(a, wa, b, wb)
-                cp = co_scheduling_profit((ia, ib), (c1, c2))
-                if cp > best_cp:
-                    s1, s2 = balanced_slice_sizes(
-                        pa, c1, pb, c2, self.min_slice(a), self.min_slice(b),
-                        self.gpu.n_sm, w1=wa, w2=wb)
-                    best = CoSchedule(a, b, wa, wb, s1, s2, cp, c1, c2)
-                    best_cp = cp
+                cand.append((a, wa, b, wb))
+        self._prefetch_solo(names)
+        self._eval_pairs(cand)
+        best, best_cp = None, -np.inf
+        for a, wa, b, wb in cand:
+            ia, ib = self.solo_ipc(a), self.solo_ipc(b)
+            c1, c2 = self._pair_cache[(a, wa, b, wb)]
+            cp = co_scheduling_profit((ia, ib), (c1, c2))
+            if cp > best_cp:
+                s1, s2 = balanced_slice_sizes(
+                    self.profiles[a], c1, self.profiles[b], c2,
+                    self.min_slice(a), self.min_slice(b),
+                    self.gpu.n_sm, w1=wa, w2=wb)
+                best = CoSchedule(a, b, wa, wb, s1, s2, cp, c1, c2)
+                best_cp = cp
         if best is None or best.cp <= self.cp_margin:
             # no pair predicted profitable -> run the head kernel solo
             n = names[0]

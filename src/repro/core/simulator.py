@@ -9,15 +9,36 @@ validated *against this simulator* exactly as the paper validates against
 real GPUs — prediction vs measurement.
 
 Granularity matches the model: one scheduling unit = one thread block.
+
+Measurement path layout (the hot path of the whole repro):
+
+  * ``simulate`` — vectorized single-configuration run. Per-unit constants
+    (R_m, coal, dep_ratio) are gathered once instead of being rebuilt from
+    the profile objects every round, and the per-round scatter updates use
+    ``bincount``/indexed stores. RNG draws go through ``_DrawStream`` in the
+    exact order the pre-refactor scalar loop consumed them, so results are
+    bit-identical to ``simulate_reference`` at a fixed seed.
+  * ``simulate_many`` — batched steady-state sweep over many
+    (profiles, units) configurations in one round loop, each configuration
+    on its own seeded stream: per-config results are bit-identical to a
+    standalone ``simulate`` call, independent of batch composition. This is
+    what lets an entire IPC-table row (all W splits of a pair) be measured
+    in a single call.
+  * ``simulate_reference`` — the pre-refactor scalar implementation, kept
+    verbatim as the equivalence oracle for tests.
+  * ``IPCTable`` — measurement cache with an optional content-addressed
+    on-disk store (``repro.core.ipc_cache``) so identical measurements are
+    never repeated across processes.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.profiles import GPUSpec, KernelProfile
+from repro.core import ipc_cache
 
 
 @dataclasses.dataclass
@@ -27,6 +48,55 @@ class SimResult:
     instructions: list      # per-kernel instructions issued
     pur: list               # per-kernel pipeline utilization ratio
     mur: list               # per-kernel memory utilization ratio
+
+
+class _DrawStream:
+    """Buffered uniform draws with the same stream semantics as successive
+    ``rng.random(n)`` calls (numpy Generators fill arrays from consecutive
+    bit-generator output, so chunked prefetch preserves the sequence)."""
+
+    __slots__ = ("_rng", "_chunk", "_buf", "_pos")
+
+    def __init__(self, rng: np.random.Generator, chunk: int = 1 << 15):
+        self._rng = rng
+        self._chunk = chunk
+        self._buf = np.empty(0, dtype=np.float64)
+        self._pos = 0
+
+    def take(self, n: int) -> np.ndarray:
+        pos = self._pos
+        if pos + n > self._buf.size:
+            tail = self._buf[pos:]
+            need = max(self._chunk, n - tail.size)
+            self._buf = np.concatenate([tail, self._rng.random(need)])
+            pos = 0
+        self._pos = pos + n
+        return self._buf[pos:pos + n]
+
+
+def _setup_units(profiles, units, blocks, insns_per_block):
+    """Initial unit assignment shared by all simulate variants."""
+    nk = len(profiles)
+    owner, rem_ins = [], []
+    blocks_left = list(blocks) if blocks is not None else [np.inf] * nk
+    ipb = (insns_per_block if insns_per_block is not None
+           else [p.insns_per_block for p in profiles])
+    for k in range(nk):
+        for _ in range(units[k]):
+            if blocks_left[k] > 0:
+                blocks_left[k] -= 1
+                owner.append(k)
+                rem_ins.append(ipb[k])
+    return (np.asarray(owner, dtype=np.intp),
+            np.asarray(rem_ins, dtype=np.float64), blocks_left, ipb)
+
+
+def _finish(instr, mem_reqs, cycles, nk, gpu):
+    ipcs = [instr[k] / max(cycles, 1.0) * gpu.peak_ipc for k in range(nk)]
+    purs = [ipcs[k] / gpu.peak_ipc for k in range(nk)]
+    murs = [mem_reqs[k] / max(cycles, 1.0) / gpu.bw_per_sm for k in range(nk)]
+    return SimResult(ipcs=ipcs, cycles=cycles, instructions=list(instr),
+                     pur=purs, mur=murs)
 
 
 def simulate(profiles, units, gpu: GPUSpec, *, seed: int = 0,
@@ -39,6 +109,221 @@ def simulate(profiles, units, gpu: GPUSpec, *, seed: int = 0,
     (insns_per_block instructions each) until the per-kernel block budget is
     exhausted; otherwise measures steady-state IPC over ``rounds``.
     """
+    if blocks is None:
+        # steady state is the batched sweep with a batch of one — a single
+        # shared inner loop, bit-identical to the scalar reference
+        return simulate_many([(profiles, units)], gpu, seed=seed,
+                             rounds=rounds)[0]
+    nk = len(profiles)
+    owner, rem_ins, blocks_left, ipb = _setup_units(
+        profiles, units, blocks, insns_per_block)
+    nu = owner.size
+    # per-unit constants, gathered once (the old loop rebuilt these from the
+    # profile objects every round)
+    rm_u = np.array([p.rm for p in profiles])[owner]
+    coal_u = np.array([p.coal for p in profiles])[owner]
+    dep_u = np.array([getattr(p, "dep_ratio", 0.0) for p in profiles])[owner]
+
+    rem_lat = np.zeros(nu, dtype=np.float64)
+    uncoal = np.zeros(nu, dtype=bool)
+    mem_pend = np.zeros(nu, dtype=bool)   # stalled on memory (vs dep)
+    alive = np.ones(nu, dtype=bool)
+
+    stream = _DrawStream(np.random.default_rng(seed))
+    instr = np.zeros(nk)
+    mem_reqs = np.zeros(nk)
+    uf = gpu.uncoal_factor
+    cycles = 0.0
+    # makespan mode from here on (steady state returned above): the loop
+    # runs until every unit retires its block budget
+    while alive.any():
+        ready = alive & (rem_lat <= 0)
+        n_ready = int(ready.sum())
+        dur = max(n_ready, 1)
+        if n_ready:
+            idx = np.where(ready)[0]
+            ks = owner[idx]
+            instr += np.bincount(ks, minlength=nk)
+            rem_ins[idx] -= 1.0
+            # stalls: memory (coalesced / uncoalesced) or pipeline dependency
+            rms = rm_u[idx]
+            u = stream.take(n_ready)
+            mem_stall = u < rms
+            dep_stall = (~mem_stall) & (u < rms + dep_u[idx])
+            is_uncoal = mem_stall & (stream.take(n_ready) >= coal_u[idx])
+            n_req_now = float((mem_pend[alive]).sum()
+                              + uncoal[alive & mem_pend].sum() * (uf - 1))
+            lat_c = gpu.mem_latency + gpu.contention * n_req_now
+            st_idx = idx[mem_stall]
+            rem_lat[st_idx] = np.where(is_uncoal[mem_stall],
+                                       lat_c * uf, lat_c)
+            uncoal[st_idx] = is_uncoal[mem_stall]
+            mem_pend[st_idx] = True
+            dp_idx = idx[dep_stall]
+            rem_lat[dp_idx] = gpu.dep_latency
+            mem_pend[dp_idx] = False
+            mem_reqs += np.bincount(
+                ks[mem_stall],
+                weights=np.where(is_uncoal[mem_stall], uf, 1.0),
+                minlength=nk)
+        # advance time
+        cycles += dur
+        rem_lat = np.maximum(rem_lat - dur, 0.0)
+        mem_pend &= rem_lat > 0
+        # block retirement
+        done = alive & (rem_ins <= 0) & (rem_lat <= 0)
+        for i in np.where(done)[0]:
+            k = owner[i]
+            if blocks_left[k] > 0:
+                blocks_left[k] -= 1
+                rem_ins[i] = ipb[k]
+            else:
+                alive[i] = False
+    return _finish(instr, mem_reqs, cycles, nk, gpu)
+
+
+def simulate_many(configs: Sequence[Tuple[Sequence[KernelProfile],
+                                          Sequence[int]]],
+                  gpu: GPUSpec, *, seed: int = 0,
+                  rounds: int = 20000) -> list:
+    """Batched steady-state sweep: one round loop advances every
+    (profiles, units) configuration at once.
+
+    Each configuration runs on its own RNG stream seeded with ``seed``, so
+    result ``i`` is bit-identical to
+    ``simulate(configs[i][0], configs[i][1], gpu, seed=seed, rounds=rounds)``
+    regardless of which other configurations share the batch — batched
+    measurements are therefore safe to cache under per-configuration keys.
+    Steady-state only (no makespan mode). Returns a list of SimResult.
+    """
+    nc = len(configs)
+    if nc == 0:
+        return []
+    # flatten all units of all configs into one state vector
+    cfg_of, owner_g, rm_l, coal_l, dep_l = [], [], [], [], []
+    kbase = []          # first global kernel id of each config
+    nk_of = []
+    kb = 0
+    for c, (profiles, units) in enumerate(configs):
+        owner_c, _, _, _ = _setup_units(profiles, units, None, None)
+        kbase.append(kb)
+        nk_of.append(len(profiles))
+        cfg_of.extend([c] * owner_c.size)
+        owner_g.extend((kb + owner_c).tolist())
+        rm = np.array([p.rm for p in profiles])
+        co = np.array([p.coal for p in profiles])
+        dp = np.array([getattr(p, "dep_ratio", 0.0) for p in profiles])
+        rm_l.extend(rm[owner_c].tolist())
+        coal_l.extend(co[owner_c].tolist())
+        dep_l.extend(dp[owner_c].tolist())
+        kb += len(profiles)
+    cfg_of = np.asarray(cfg_of, dtype=np.intp)
+    owner_g = np.asarray(owner_g, dtype=np.intp)
+    rm_u = np.asarray(rm_l)
+    coal_u = np.asarray(coal_l)
+    dep_u = np.asarray(dep_l)
+    nu = owner_g.size
+    nk_total = kb
+    # unit index range of each config (units are laid out config-major)
+    cfg_starts = np.searchsorted(cfg_of, np.arange(nc))
+    cfg_sizes = np.diff(np.append(cfg_starts, nu))
+    if (cfg_sizes < 1).any():
+        raise ValueError("every config needs at least one active unit")
+
+    rem_lat = np.zeros(nu, dtype=np.float64)
+    uncoal = np.zeros(nu, dtype=bool)
+    mem_pend = np.zeros(nu, dtype=bool)
+
+    # Per-config RNG streams, prefetched into one 2D buffer so every round's
+    # draws come from a single fancy-indexed gather instead of a Python loop
+    # over configs. Each config consumes its stream exactly as simulate()'s
+    # random(n)-then-random(n) sequence (numpy Generators fill arrays from
+    # consecutive bit-generator output, so chunked prefetch preserves it).
+    rngs = [np.random.default_rng(seed) for _ in range(nc)]
+    chunk = max(4096, 8 * int(cfg_sizes.max()))
+    buf = np.empty((nc, chunk))
+    for c in range(nc):
+        buf[c] = rngs[c].random(chunk)
+    pos = np.zeros(nc, dtype=np.int64)
+    cfg_ids = np.arange(nc)
+    if cfg_sizes.max() > 127:
+        raise ValueError("simulate_many supports at most 127 units/config")
+
+    instr = np.zeros(nk_total)
+    mem_reqs = np.zeros(nk_total)
+    cycles = np.zeros(nc)
+    uf = gpu.uncoal_factor
+    for _ in range(rounds):
+        ready = rem_lat <= 0
+        # per-config segment counts (reduceat over the config-major layout;
+        # int8 view — reduceat on bool would compute logical-or, not counts,
+        # and segments are <= 127 units so int8 cannot overflow)
+        n_ready_c = np.add.reduceat(ready.view(np.int8),
+                                    cfg_starts).astype(np.int64)
+        dur_c = np.maximum(n_ready_c, 1)
+        idx = np.where(ready)[0]          # config-major (units contiguous)
+        if idx.size:
+            ks = owner_g[idx]
+            instr += np.bincount(ks, minlength=nk_total)
+            need = 2 * n_ready_c
+            short = np.where(pos + need > chunk)[0]
+            for c in short:               # amortized: every ~chunk/2U rounds
+                tail = chunk - pos[c]
+                buf[c, :tail] = buf[c, pos[c]:].copy()
+                buf[c, tail:] = rngs[c].random(pos[c])
+                pos[c] = 0
+            # ready-unit draw coordinates: config row, then offset within
+            # that config's stream (u block first, v block second)
+            cfg_rep = np.repeat(cfg_ids, n_ready_c)
+            cum0 = np.concatenate(([0], np.cumsum(n_ready_c)[:-1]))
+            rank = np.arange(idx.size) - cum0[cfg_rep]
+            u_col = pos[cfg_rep] + rank
+            u = buf[cfg_rep, u_col]
+            v = buf[cfg_rep, u_col + n_ready_c[cfg_rep]]
+            pos += need
+            rms = rm_u[idx]
+            mem_stall = u < rms
+            dep_stall = (~mem_stall) & (u < rms + dep_u[idx])
+            is_uncoal = mem_stall & (v >= coal_u[idx])
+            # per-config memory contention (all units alive in steady state)
+            req_c = (np.add.reduceat(mem_pend.astype(np.int64), cfg_starts)
+                     + np.add.reduceat((mem_pend & uncoal).astype(np.int64),
+                                       cfg_starts)
+                     * (uf - 1))
+            lat_base = gpu.mem_latency + gpu.contention * req_c
+            lat_u = np.repeat(lat_base, n_ready_c)   # == lat_base[cfg_of[idx]]
+            st_idx = idx[mem_stall]
+            rem_lat[st_idx] = np.where(is_uncoal[mem_stall],
+                                       lat_u[mem_stall] * uf,
+                                       lat_u[mem_stall])
+            uncoal[st_idx] = is_uncoal[mem_stall]
+            mem_pend[st_idx] = True
+            dp_idx = idx[dep_stall]
+            rem_lat[dp_idx] = gpu.dep_latency
+            mem_pend[dp_idx] = False
+            mem_reqs += np.bincount(
+                ks[mem_stall],
+                weights=np.where(is_uncoal[mem_stall], uf, 1.0),
+                minlength=nk_total)
+        cycles += dur_c
+        np.subtract(rem_lat, np.repeat(dur_c, cfg_sizes), out=rem_lat)
+        np.maximum(rem_lat, 0.0, out=rem_lat)
+        mem_pend &= rem_lat > 0
+
+    out = []
+    for c in range(nc):
+        nk = nk_of[c]
+        sl = slice(kbase[c], kbase[c] + nk)
+        out.append(_finish(instr[sl], mem_reqs[sl], float(cycles[c]),
+                           nk, gpu))
+    return out
+
+
+def simulate_reference(profiles, units, gpu: GPUSpec, *, seed: int = 0,
+                       rounds: int = 20000, blocks: Optional[list] = None,
+                       insns_per_block: Optional[list] = None) -> SimResult:
+    """Pre-refactor scalar implementation, kept verbatim as the equivalence
+    oracle: ``simulate`` must match this bit-for-bit at a fixed seed."""
     rng = np.random.default_rng(seed)
     nk = len(profiles)
     owner, rem_lat, rem_ins = [], [], []
@@ -114,42 +399,138 @@ def simulate(profiles, units, gpu: GPUSpec, *, seed: int = 0,
                     rem_ins[i] = ipb[k]
                 else:
                     alive[i] = False
-    ipcs = [instr[k] / max(cycles, 1.0) * gpu.peak_ipc for k in range(nk)]
-    purs = [ipcs[k] / gpu.peak_ipc for k in range(nk)]
-    murs = [mem_reqs[k] / max(cycles, 1.0) / gpu.bw_per_sm for k in range(nk)]
-    return SimResult(ipcs=ipcs, cycles=cycles, instructions=list(instr),
-                     pur=purs, mur=murs)
+    return _finish(instr, mem_reqs, cycles, nk, gpu)
 
 
 # --------------------------------------------------------------------- #
 # cached IPC tables ("pre-execution", used as ground truth / oracle input)
 # --------------------------------------------------------------------- #
 class IPCTable:
-    """Caches simulator measurements: solo IPCs and pair cIPCs per split."""
+    """Caches simulator measurements: solo IPCs and pair cIPCs per split.
 
-    def __init__(self, gpu: GPUSpec, seed: int = 0, rounds: int = 12000):
+    With ``persist=True`` (default) measurements are also kept in a
+    content-addressed on-disk store shared across processes — see
+    ``repro.core.ipc_cache`` for the key scheme and the ``REPRO_IPC_CACHE``
+    override. ``solo_many``/``pair_many`` measure all missing entries of a
+    batch in a single ``simulate_many`` sweep.
+    """
+
+    def __init__(self, gpu: GPUSpec, seed: int = 0, rounds: int = 12000,
+                 persist: bool = True):
         self.gpu = gpu
         self.seed = seed
         self.rounds = rounds
         self._solo = {}
         self._pair = {}
+        self._store = (ipc_cache.IPCCache(gpu, seed, rounds)
+                       if persist else None)
 
+    # ---- persistent-store plumbing ---- #
+    def _store_get(self, kind, prof_ws):
+        if self._store is None:
+            return None
+        return self._store.get(kind, prof_ws)
+
+    def _store_put(self, kind, prof_ws, value):
+        if self._store is not None:
+            self._store.put(kind, prof_ws, value)
+
+    def save(self):
+        """Flush newly measured entries to the on-disk store (no-op when
+        persistence is disabled)."""
+        if self._store is not None:
+            self._store.save()
+
+    # ---- batched measurement core ---- #
+    def _measure(self, specs):
+        """specs: list of (key_kind, in-mem key, [(prof, w), ...]). Measures
+        every spec missing from both cache layers in one simulate_many call
+        and fills both layers."""
+        missing, queued = [], set()
+        for kind, key, prof_ws in specs:
+            mem = self._solo if kind == "solo" else self._pair
+            if key in mem or (kind, key) in queued:
+                continue
+            hit = self._store_get(kind, prof_ws)
+            if hit is not None:
+                mem[key] = hit
+                continue
+            queued.add((kind, key))
+            missing.append((kind, key, prof_ws))
+        if missing:
+            cfgs = [([p for p, _ in prof_ws], [w for _, w in prof_ws])
+                    for _, _, prof_ws in missing]
+            results = simulate_many(cfgs, self.gpu, seed=self.seed,
+                                    rounds=self.rounds)
+            for (kind, key, prof_ws), res in zip(missing, results):
+                mem = self._solo if kind == "solo" else self._pair
+                val = (res.ipcs[0] if kind == "solo"
+                       else (res.ipcs[0], res.ipcs[1]))
+                mem[key] = val
+                self._store_put(kind, prof_ws, val)
+            self.save()
+
+    # ---- public API ---- #
+    # in-memory keys hold the (frozen, hashable) profiles themselves, so two
+    # same-named profiles with different content can never collide
     def solo(self, prof: KernelProfile, w: Optional[int] = None) -> float:
         w = w if w is not None else prof.active_units(self.gpu)
-        key = (prof.name, w)
-        if key not in self._solo:
-            res = simulate([prof], [w], self.gpu, seed=self.seed,
-                           rounds=self.rounds)
-            self._solo[key] = res.ipcs[0]
-        return self._solo[key]
+        self._measure([("solo", (prof, w), [(prof, w)])])
+        return self._solo[(prof, w)]
 
     def pair(self, p1: KernelProfile, w1: int, p2: KernelProfile, w2: int):
-        key = (p1.name, w1, p2.name, w2)
-        if key not in self._pair:
-            res = simulate([p1, p2], [w1, w2], self.gpu, seed=self.seed,
-                           rounds=self.rounds)
-            self._pair[key] = (res.ipcs[0], res.ipcs[1])
+        key = (p1, w1, p2, w2)
+        self._measure([("pair", key, [(p1, w1), (p2, w2)])])
         return self._pair[key]
+
+    def solo_many(self, items):
+        """items: [(prof, w)] -> list of solo IPCs, measured in one sweep."""
+        specs = [("solo", (p, w), [(p, w)]) for p, w in items]
+        self._measure(specs)
+        return [self._solo[(p, w)] for p, w in items]
+
+    def pair_many(self, items):
+        """items: [(p1, w1, p2, w2)] -> list of (cIPC1, cIPC2), measuring
+        every missing configuration in a single batched sweep."""
+        specs = [("pair", tuple(it), [(it[0], it[1]), (it[2], it[3])])
+                 for it in items]
+        self._measure(specs)
+        return [self._pair[tuple(it)] for it in items]
+
+    def pair_row(self, p1: KernelProfile, p2: KernelProfile, splits):
+        """All W splits of one pair (an IPC-table row) in one batched call.
+        splits: [(w1, w2)] -> {(w1, w2): (cIPC1, cIPC2)}."""
+        vals = self.pair_many([(p1, w1, p2, w2) for w1, w2 in splits])
+        return dict(zip(splits, vals))
+
+    def prefill(self, profiles):
+        """The paper's pre-execution step: measure the full table — every
+        kernel's solo IPC at its occupancy plus every ordered pair at every
+        feasible split — in one batched sweep. Afterwards any solo()/pair()
+        query a scheduler or replay can make is a cache hit.
+
+        profiles: dict or iterable of KernelProfile.
+        """
+        profs = (list(profiles.values()) if isinstance(profiles, dict)
+                 else list(profiles))
+        W = self.gpu.units_per_sm
+        specs = []
+        for p in profs:
+            w = p.active_units(self.gpu)
+            specs.append(("solo", (p, w), [(p, w)]))
+        for p1 in profs:
+            w1_max = p1.active_units(self.gpu)
+            for p2 in profs:
+                if p1 is p2:
+                    continue
+                w2_max = p2.active_units(self.gpu)
+                for w1 in range(1, W):
+                    w2 = min(W - w1, w2_max)
+                    if w1 > w1_max or w2 < 1:
+                        continue
+                    specs.append(("pair", (p1, w1, p2, w2),
+                                  [(p1, w1), (p2, w2)]))
+        self._measure(specs)
 
 
 # --------------------------------------------------------------------- #

@@ -52,8 +52,10 @@ def test_forward_shapes_and_finite(arch_setup):
 def test_train_step_no_nan(arch_setup):
     arch, cfg, params = arch_setup
     batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, 2, 32).items()}
-    (loss, metrics), grads = jax.value_and_grad(
-        lambda p: T.train_loss(p, cfg, batch), has_aux=True)(params)
+    # jit: one XLA compile beats per-op eager dispatch through the big graph
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p: T.train_loss(p, cfg, batch), has_aux=True))
+    (loss, metrics), grads = grad_fn(params)
     assert bool(jnp.isfinite(loss))
     gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                          for g in jax.tree_util.tree_leaves(grads)))
@@ -80,9 +82,11 @@ def test_decode_matches_forward(arch_setup):
     pre["tokens"] = fwd["tokens"][:, :prompt]
     lp, caches = T.prefill(params, cfg, pre, caches)
     errs = [float(jnp.max(jnp.abs(lp[:, -1] - full_logits[:, prompt - 1])))]
+    # jit the step once: the eager loop re-dispatched the whole layer stack
+    # per token and dominated the tier-1 suite's runtime
+    step = jax.jit(lambda p, c, tok, t: T.decode_step(p, cfg, c, tok, t))
     for t in range(prompt, s):
-        lg, caches = T.decode_step(params, cfg, caches,
-                                   fwd["tokens"][:, t], jnp.int32(t))
+        lg, caches = step(params, caches, fwd["tokens"][:, t], jnp.int32(t))
         errs.append(float(jnp.max(jnp.abs(lg - full_logits[:, t]))))
     assert max(errs) < 5e-4, f"{arch}: {max(errs)}"
 

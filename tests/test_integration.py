@@ -108,6 +108,31 @@ def test_scheduler_feeds_fused_kernel():
     np.testing.assert_allclose(np.asarray(st), np.asarray(sref), atol=1e-6)
 
 
+def test_workload_replay_policies():
+    """fig13-style workload replay end-to-end through the batched/cached
+    measurement path: prefilled IPC table, memoized co-schedule search,
+    reduced rounds so the whole replay takes seconds, not minutes."""
+    from repro.core.calibrate import calibrated_benchmarks
+    from repro.core.profiles import C2050, WORKLOADS
+    from repro.core.queue import make_workload, run_policy
+    from repro.core.simulator import IPCTable
+
+    gpu = C2050
+    profs = calibrated_benchmarks(gpu)
+    truth = IPCTable(gpu.virtual(), rounds=4000, persist=False)
+    truth.prefill(profs)                 # pre-execution: one batched sweep
+    for wl in ("MIX", "ALL"):
+        order = make_workload(profs, WORKLOADS[wl], instances=100)
+        res = {pol: run_policy(pol, profs, order, gpu, truth)
+               for pol in ("BASE", "KERNELET", "OPT")}
+        base = res["BASE"].total_cycles
+        knl = res["KERNELET"].total_cycles
+        opt = res["OPT"].total_cycles
+        assert res["KERNELET"].n_coschedules >= 1
+        assert knl < base * 0.95, (wl, knl / base)   # co-scheduling pays
+        assert knl < opt * 1.10, (wl, knl / opt)     # close to the oracle
+
+
 def test_serving_queue_drains():
     from repro.launch.serve import Job, SharedPodServer
     srv = SharedPodServer()

@@ -1,0 +1,182 @@
+"""Tests for the vectorized measurement path: seeded equivalence of the
+vectorized simulator against the pre-refactor scalar implementation, the
+batched sweep, the on-disk IPC cache, and the incremental scheduler/queue.
+"""
+import numpy as np
+import pytest
+
+import repro.core.simulator as SIM
+from repro.core.calibrate import calibrated_benchmarks
+from repro.core.ipc_cache import IPCCache
+from repro.core.profiles import C2050, KernelProfile
+from repro.core.queue import _Pending, make_workload, run_policy
+from repro.core.scheduler import KerneletScheduler
+from repro.core.simulator import (IPCTable, simulate, simulate_many,
+                                  simulate_reference)
+
+GPU = C2050
+VG = GPU.virtual()
+ROUNDS = 2500           # plenty for bit-exact comparisons, fast enough
+
+
+@pytest.fixture(scope="module")
+def profs():
+    return calibrated_benchmarks(GPU)
+
+
+# ------------------------------------------------------------------ #
+# seeded equivalence: vectorized vs pre-refactor scalar
+# ------------------------------------------------------------------ #
+def test_simulate_matches_reference_solo(profs):
+    for name, p in profs.items():
+        w = p.active_units(VG)
+        new = simulate([p], [w], VG, seed=7, rounds=ROUNDS)
+        ref = simulate_reference([p], [w], VG, seed=7, rounds=ROUNDS)
+        # bit-exact by construction; assert the ISSUE's 2% bound loudly and
+        # exactness quietly
+        assert new.cycles == ref.cycles, name
+        np.testing.assert_allclose(new.ipcs, ref.ipcs, rtol=0.02)
+        np.testing.assert_allclose(new.pur, ref.pur, rtol=0.02)
+        np.testing.assert_allclose(new.mur, ref.mur, rtol=0.02, atol=1e-12)
+        assert new.ipcs == ref.ipcs and new.mur == ref.mur, name
+
+
+def test_simulate_matches_reference_pair(profs):
+    pa, pb = profs["PC"], profs["TEA"]
+    for seed in (0, 1, 2):
+        new = simulate([pa, pb], [2, 2], VG, seed=seed, rounds=ROUNDS)
+        ref = simulate_reference([pa, pb], [2, 2], VG, seed=seed,
+                                 rounds=ROUNDS)
+        assert new.ipcs == ref.ipcs and new.cycles == ref.cycles
+        assert new.pur == ref.pur and new.mur == ref.mur
+
+
+def test_simulate_matches_reference_makespan(profs):
+    pa, pb = profs["SPMV"], profs["MM"]
+    kw = dict(seed=5, blocks=[30, 45], insns_per_block=[150.0, 220.0])
+    new = simulate([pa, pb], [2, 2], VG, **kw)
+    ref = simulate_reference([pa, pb], [2, 2], VG, **kw)
+    assert new.ipcs == ref.ipcs and new.cycles == ref.cycles
+    assert new.instructions == ref.instructions
+
+
+def test_simulate_many_matches_per_config(profs):
+    """Batched results are independent of batch composition: each config
+    equals its standalone simulate() run."""
+    names = sorted(profs)
+    cfgs = [([profs[n]], [profs[n].active_units(VG)]) for n in names[:4]]
+    cfgs.append(([profs["PC"], profs["TEA"]], [1, 3]))
+    cfgs.append(([profs["PC"], profs["TEA"]], [2, 2]))
+    batch = simulate_many(cfgs, VG, seed=0, rounds=ROUNDS)
+    for (ps, us), res in zip(cfgs, batch):
+        solo = simulate(ps, us, VG, seed=0, rounds=ROUNDS)
+        assert res.ipcs == solo.ipcs and res.cycles == solo.cycles
+        assert res.mur == solo.mur
+
+
+def test_simulate_many_rejects_empty_config(profs):
+    p = profs["PC"]
+    with pytest.raises(ValueError):
+        simulate_many([([p], [0])], VG, rounds=10)
+
+
+# ------------------------------------------------------------------ #
+# on-disk IPC cache
+# ------------------------------------------------------------------ #
+def test_ipc_cache_round_trip(profs, tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_IPC_CACHE", str(tmp_path))
+    t1 = IPCTable(VG, rounds=ROUNDS)
+    pa, pb = profs["PC"], profs["TEA"]
+    s = t1.solo(pa)
+    c = t1.pair(pa, 2, pb, 2)
+    # a fresh table (fresh process stand-in) sees identical values …
+    t2 = IPCTable(VG, rounds=ROUNDS)
+    assert t2.solo(pa) == s
+    assert t2.pair(pa, 2, pb, 2) == c
+    # … without ever touching the simulator
+    def _boom(*a, **k):
+        raise AssertionError("cache hit should not re-simulate")
+    monkeypatch.setattr(SIM, "simulate_many", _boom)
+    t3 = IPCTable(VG, rounds=ROUNDS)
+    assert t3.solo(pa) == s
+    assert t3.pair(pa, 2, pb, 2) == c
+
+
+def test_ipc_cache_content_addressing(profs, tmp_path, monkeypatch):
+    """Changing any profile field or the round count misses the cache:
+    same-name profiles with different content get separate entries, and a
+    different round count gets a separate file."""
+    import dataclasses
+    monkeypatch.setenv("REPRO_IPC_CACHE", str(tmp_path))
+    pa = profs["PC"]
+    t = IPCTable(VG, rounds=ROUNDS)
+    t.solo(pa)
+    t.solo(dataclasses.replace(pa, rm=pa.rm * 1.5))    # same name, new key
+    store = IPCCache(VG, 0, ROUNDS)
+    assert len(store._data["solo"]) == 2
+    IPCTable(VG, rounds=ROUNDS + 500).solo(pa)
+    files = sorted(f.name for f in tmp_path.iterdir())
+    assert len(files) == 2 and any(f"r{ROUNDS + 500}" in f for f in files)
+
+
+def test_ipc_cache_disabled_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_IPC_CACHE", "0")
+    p = KernelProfile("K", rm=0.1, coal=1.0, insns_per_block=100.0,
+                      num_blocks=64, occupancy=1.0)
+    cache = IPCCache(VG, 0, ROUNDS)
+    assert cache.path is None
+    t = IPCTable(VG, rounds=ROUNDS)
+    t.solo(p)
+    t.save()                            # no-op, must not write anywhere
+    assert list(tmp_path.iterdir()) == []
+
+
+# ------------------------------------------------------------------ #
+# incremental scheduler + queue
+# ------------------------------------------------------------------ #
+def test_find_coschedule_memoized(profs, monkeypatch):
+    sched = KerneletScheduler(GPU, profs)
+    names = ["PC", "TEA", "MM", "SPMV"]
+    first = sched.find_coschedule(names)
+    monkeypatch.setattr(sched, "_search",
+                        lambda *a: pytest.fail("memo miss on same set"))
+    # same set (any order / duplicates) must be a pure cache hit
+    assert sched.find_coschedule(list(reversed(names))) is first
+    assert sched.find_coschedule(names + ["PC"]) is first
+
+
+def test_find_coschedule_decisions_unchanged(profs):
+    """Batched search picks the same schedule as per-candidate evaluation
+    (oracle mode measures through the batched sweep)."""
+    table = IPCTable(VG, rounds=ROUNDS, persist=False)
+    sched = KerneletScheduler(GPU, profs, decision_table=table)
+    cs = sched.find_coschedule(["PC", "TEA", "MM", "SPMV"])
+    assert cs.k2 is not None
+    c1, c2 = table.pair(profs[cs.k1], cs.w1, profs[cs.k2], cs.w2)
+    assert (cs.cipc1, cs.cipc2) == (c1, c2)
+
+
+def test_pending_order_and_drain(profs):
+    order = ["A", "B", "A", "C", "B"]
+    prof = {n: KernelProfile(n, rm=0.1, coal=1.0, insns_per_block=10.0,
+                             num_blocks=5, occupancy=1.0)
+            for n in "ABC"}
+    pend = _Pending(prof, order)
+    assert pend.order == ["A", "B", "C"]          # deduped queue order
+    assert pend.blocks["A"] == 10
+    pend.drain("A", 10)
+    assert pend.active() == ["B", "C"]
+    pend.drain("A", 1)                            # idempotent on drained
+    assert pend.active() == ["B", "C"]
+
+
+def test_run_policy_fast_replay(profs):
+    """Workload replay through the cached/batched path stays consistent
+    across policies and finishes quickly at small rounds."""
+    truth = IPCTable(VG, rounds=ROUNDS, persist=False)
+    order = make_workload(profs, ["PC", "TEA", "MM", "SPMV"], instances=50)
+    res = {pol: run_policy(pol, profs, order, GPU, truth)
+           for pol in ("BASE", "KERNELET", "OPT")}
+    for r in res.values():
+        assert r.total_cycles > 0
+    assert res["KERNELET"].n_coschedules >= 1
