@@ -51,6 +51,9 @@ def main() -> None:
         dt = time.time() - t0
         with open(os.path.join(args.out, name + ".json"), "w") as f:
             json.dump(rec, f, indent=1, default=float)
+        if name == "decision_latency" and not args.fast:
+            # grow the tracked perf trajectory (point samples -> history)
+            decision_latency.record_history(rec)
         print(f"{name},{dt * 1e6:.0f},{_headline_str(rec)}")
 
 

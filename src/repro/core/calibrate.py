@@ -24,8 +24,25 @@ from __future__ import annotations
 import dataclasses
 import functools
 
-from repro.core.markov import MarkovModel
-from repro.core.profiles import GPUSpec, KernelProfile, paper_benchmarks
+from repro.core import ipc_cache
+from repro.core.markov import MARKOV_SCHEMA, MarkovModel
+from repro.core.profiles import (GPUSpec, KernelProfile, content_digest,
+                                 paper_benchmarks)
+
+# bump when the calibration procedure changes in a way that alters profiles
+_CALIB_SCHEMA = 1
+
+
+def _profile_store(gpu: GPUSpec):
+    """Per-GPU persistent store for calibrated profiles. The schema folds
+    in the Markov schema: calibration inverts model solves, so a physics
+    change must invalidate stored profiles too."""
+    base = ipc_cache.cache_dir()
+    if base is None:
+        return None
+    return ipc_cache.ArtifactStore(
+        f"calib_{content_digest(gpu)}", ("profiles",),
+        schema=_CALIB_SCHEMA * 1000 + MARKOV_SCHEMA, dirname=base)
 
 
 def _invert(model: MarkovModel, base: KernelProfile, w: int,
@@ -46,9 +63,26 @@ def _invert(model: MarkovModel, base: KernelProfile, w: int,
 
 @functools.lru_cache(maxsize=8)
 def calibrated_benchmarks(gpu: GPUSpec) -> dict:
-    """Paper's 8 kernels calibrated to Table 4 PUR/MUR (see module doc)."""
+    """Paper's 8 kernels calibrated to Table 4 PUR/MUR (see module doc).
+
+    Results are persisted in the artifacts cache (content-addressed on the
+    GPU digest plus the calibration/Markov schema), so warm processes skip
+    the ~0.3 s of Markov binary searches entirely."""
+    store = _profile_store(gpu)
+    if store is not None:
+        hit = store.get("profiles", "benchmarks")
+        if hit is not None:
+            try:
+                return {name: KernelProfile(**fields)
+                        for name, fields in hit.items()}
+            except TypeError:
+                pass             # field-set drift: fall through, recompute
     vgpu = gpu.virtual()
-    model = MarkovModel(vgpu, three_state=True)
+    # persist=False: the bisection probes are hundreds of one-off midpoint
+    # profiles nothing ever re-queries — only the final *profiles* artifact
+    # is worth disk (schedulers re-solve the calibrated profiles under
+    # their own keys and persist those)
+    model = MarkovModel(vgpu, three_state=True, persist=False)
     out = {}
     for name, p in paper_benchmarks(gpu).items():
         w = p.active_units(vgpu)
@@ -86,4 +120,8 @@ def calibrated_benchmarks(gpu: GPUSpec) -> dict:
         ipb = max(50.0, t_inst.get(name, 2.0e7) * ipc_vg * gpu.n_sm
                   / p.num_blocks)
         out[name] = dataclasses.replace(p, insns_per_block=float(round(ipb)))
+    if store is not None:
+        store.put("profiles", "benchmarks",
+                  {name: dataclasses.asdict(p) for name, p in out.items()})
+        store.save()
     return out

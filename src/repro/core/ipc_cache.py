@@ -1,20 +1,29 @@
-"""Persistent, content-addressed store for simulator IPC measurements.
+"""Persistent, content-addressed artifact store for measurement-side results.
 
 The paper's "pre-execution" step measures kernel IPC tables once, offline;
 online scheduling then only reads them. This module gives the repro the
-same property across *processes*: every (GPUSpec, seed, rounds) triple maps
-to one JSON file whose entries are keyed by the content digest of the
-participating KernelProfiles plus their unit splits, so
+same property across *processes*, and generalizes it beyond IPC tables: any
+deterministic, content-addressable artifact of the measurement path
+(simulator IPC measurements, calibrated benchmark profiles, Markov-model
+solves) lives in one keyed JSON store per identity, so
 
-  * identical measurements are never re-simulated, no matter which
-    benchmark, test, or example asks first;
-  * any change to a profile field, the GPU spec, the seed, the round count,
-    or the simulator physics (``_SCHEMA``) silently misses and re-measures —
-    there is no way to read a stale value.
+  * identical computations are never repeated, no matter which benchmark,
+    test, or example asks first;
+  * any change to an input field, the seed, the round count, or the
+    producing code (each store's schema version) silently misses and
+    recomputes — there is no way to read a stale value.
 
-Layout:  <cache_dir>/ipc_<gpu digest>_s<seed>_r<rounds>.json
-         {"solo": {"<prof>:<w>": ipc, ...},
-          "pair": {"<p1>:<w1>|<p2>:<w2>": [cipc1, cipc2], ...}}
+``ArtifactStore`` is the generic layer: one JSON file per (name, schema),
+holding one dict of entries per *kind*, dirty-tracked, written atomically
+and merged with concurrent writers at save time. ``IPCCache`` is the IPC
+table instance of it (kinds ``solo``/``pair``), keeping its original API.
+
+Layout:  <cache_dir>/<name>_v<schema>.json
+         {"schema": <int>, "kinds": {"<kind>": {"<key>": value, ...}, ...}}
+
+(IPC files keep their historical flat layout for compatibility:
+``ipc_v<schema>_<gpu digest>_s<seed>_r<rounds>.json`` with top-level
+``solo``/``pair`` dicts.)
 
 ``cache_dir`` defaults to ``artifacts/ipc_cache`` under the current working
 directory and is overridable via the ``REPRO_IPC_CACHE`` environment
@@ -26,7 +35,7 @@ from __future__ import annotations
 import json
 import os
 import tempfile
-from typing import Optional
+from typing import Optional, Sequence
 
 from repro.core.profiles import GPUSpec, content_digest
 
@@ -51,52 +60,75 @@ def _entry_key(prof_ws) -> str:
     return "|".join(f"{content_digest(p)}:{w}" for p, w in prof_ws)
 
 
-class IPCCache:
-    """One on-disk table per (gpu, seed, rounds); dirty-tracked JSON with
-    atomic writes so concurrent processes never see torn files."""
+class ArtifactStore:
+    """Keyed JSON artifact store: one file per (name, schema), entries
+    grouped by kind. Dirty-tracked, atomic writes, merge-on-save union so
+    concurrent processes never clobber each other.
 
-    def __init__(self, gpu: GPUSpec, seed: int, rounds: int,
-                 path: Optional[str] = None):
-        base = path if path is not None else cache_dir()
-        if base is None:
-            self.path = None
-            self._data = {"solo": {}, "pair": {}}
-            self._dirty = False
-            return
-        fname = (f"ipc_v{_SCHEMA}_{content_digest(gpu)}"
-                 f"_s{seed}_r{rounds}.json")
-        self.path = os.path.join(base, fname)
+    Values must be JSON-serializable and *content-addressed by their key*:
+    two writers putting the same key always mean the same value, so a dict
+    union across processes is always valid.
+    """
+
+    def __init__(self, name: str, kinds: Sequence[str], schema: int = 1,
+                 path: Optional[str] = None, dirname: Optional[str] = None):
+        self._kinds = tuple(kinds)
+        self._schema = int(schema)
+        if path is not None:
+            self.path = path
+        else:
+            base = dirname if dirname is not None else cache_dir()
+            self.path = (None if base is None
+                         else os.path.join(base, f"{name}_v{schema}.json"))
         self._data = self._load()
         self._dirty = False
 
+    # ---- on-disk format ---- #
+    def _empty(self) -> dict:
+        return {k: {} for k in self._kinds}
+
+    def _decode(self, raw) -> Optional[dict]:
+        """Validate a parsed JSON payload; None when unusable (wrong shape
+        or schema-version mismatch) so the caller falls back to empty."""
+        if not isinstance(raw, dict):
+            return None
+        if raw.get("schema") != self._schema:
+            return None
+        kinds = raw.get("kinds")
+        if not isinstance(kinds, dict):
+            return None
+        if not all(isinstance(kinds.get(k), dict) for k in self._kinds):
+            return None
+        return {k: kinds[k] for k in self._kinds}
+
+    def _encode(self, data: dict) -> dict:
+        return {"schema": self._schema, "kinds": data}
+
     def _load(self) -> dict:
+        if self.path is None:
+            return self._empty()
         try:
             with open(self.path) as f:
-                data = json.load(f)
-            if (isinstance(data, dict) and isinstance(data.get("solo"), dict)
-                    and isinstance(data.get("pair"), dict)):
-                return data
+                raw = json.load(f)
         except (OSError, ValueError):
-            pass
-        return {"solo": {}, "pair": {}}
+            # missing, unreadable, corrupted, or truncated file: start
+            # empty — the store is a cache, never a correctness dependency
+            return self._empty()
+        data = self._decode(raw)
+        return data if data is not None else self._empty()
 
     # ---- entry access ---- #
-    def get(self, kind: str, prof_ws):
-        """kind: 'solo' | 'pair'; prof_ws: [(profile, w), ...]. Returns the
-        cached float / (cipc1, cipc2) tuple, or None on miss."""
-        val = self._data[kind].get(_entry_key(prof_ws))
-        if val is None:
-            return None
-        return tuple(val) if kind == "pair" else float(val)
+    def get(self, kind: str, key: str):
+        """Raw JSON value stored under (kind, key), or None on miss."""
+        return self._data[kind].get(key)
 
-    def put(self, kind: str, prof_ws, value) -> None:
-        self._data[kind][_entry_key(prof_ws)] = (
-            list(value) if kind == "pair" else float(value))
+    def put(self, kind: str, key: str, value) -> None:
+        self._data[kind][key] = value
         if self.path is not None:
             self._dirty = True
 
     def __len__(self) -> int:
-        return len(self._data["solo"]) + len(self._data["pair"])
+        return sum(len(d) for d in self._data.values())
 
     # ---- persistence ---- #
     def save(self) -> None:
@@ -105,7 +137,7 @@ class IPCCache:
         # merge with whatever a concurrent process wrote since our load:
         # entries are content-addressed, so union is always valid
         on_disk = self._load()
-        for kind in ("solo", "pair"):
+        for kind in self._kinds:
             merged = dict(on_disk[kind])
             merged.update(self._data[kind])
             self._data[kind] = merged
@@ -115,7 +147,7 @@ class IPCCache:
             fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path),
                                        suffix=".tmp")
             with os.fdopen(fd, "w") as f:
-                json.dump(self._data, f)
+                json.dump(self._encode(self._data), f)
             os.replace(tmp, self.path)
             self._dirty = False          # only a successful write settles it
         except OSError:
@@ -127,3 +159,44 @@ class IPCCache:
                     os.unlink(tmp)
                 except OSError:
                     pass
+
+
+class IPCCache(ArtifactStore):
+    """One on-disk IPC table per (gpu, seed, rounds). Keeps the historical
+    flat file layout (top-level ``solo``/``pair`` dicts, schema in the file
+    name) and the prof_ws-keyed get/put API on top of ``ArtifactStore``."""
+
+    def __init__(self, gpu: GPUSpec, seed: int, rounds: int,
+                 path: Optional[str] = None):
+        base = path if path is not None else cache_dir()
+        fpath = None
+        if base is not None:
+            fname = (f"ipc_v{_SCHEMA}_{content_digest(gpu)}"
+                     f"_s{seed}_r{rounds}.json")
+            fpath = os.path.join(base, fname)
+        super().__init__("ipc", ("solo", "pair"), schema=_SCHEMA,
+                         path=fpath)
+
+    # historical flat layout: {"solo": {...}, "pair": {...}} with the schema
+    # version carried by the file name instead of a field
+    def _decode(self, raw) -> Optional[dict]:
+        if (isinstance(raw, dict) and isinstance(raw.get("solo"), dict)
+                and isinstance(raw.get("pair"), dict)):
+            return {"solo": raw["solo"], "pair": raw["pair"]}
+        return None
+
+    def _encode(self, data: dict) -> dict:
+        return data
+
+    # ---- entry access (typed on top of the raw store) ---- #
+    def get(self, kind: str, prof_ws):
+        """kind: 'solo' | 'pair'; prof_ws: [(profile, w), ...]. Returns the
+        cached float / (cipc1, cipc2) tuple, or None on miss."""
+        val = super().get(kind, _entry_key(prof_ws))
+        if val is None:
+            return None
+        return tuple(val) if kind == "pair" else float(val)
+
+    def put(self, kind: str, prof_ws, value) -> None:
+        super().put(kind, _entry_key(prof_ws),
+                    list(value) if kind == "pair" else float(value))

@@ -37,7 +37,40 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.profiles import GPUSpec, KernelProfile
+from repro.core import ipc_cache
+from repro.core.profiles import GPUSpec, KernelProfile, content_digest
+
+# bump when the model physics change in a way that alters solved IPCs
+MARKOV_SCHEMA = 1
+
+# Module-level solve cache: keyed on the frozen (gpu, three_state, profiles,
+# splits) value tuples, so solves are deduped across every MarkovModel
+# instance in the process (schedulers are created per run_policy call).
+_SOLVES: dict = {}
+
+
+@functools.lru_cache(maxsize=16)
+def _store_at(gpu: GPUSpec, three_state: bool,
+              dirname: str) -> ipc_cache.ArtifactStore:
+    tag = "3s" if three_state else "2s"
+    return ipc_cache.ArtifactStore(
+        f"markov_{content_digest(gpu)}_{tag}", ("single", "pair"),
+        schema=MARKOV_SCHEMA, dirname=dirname)
+
+
+def _solve_store(gpu: GPUSpec,
+                 three_state: bool) -> Optional[ipc_cache.ArtifactStore]:
+    """Persistent store for Markov solves (solves are deterministic, so
+    they are content-addressable exactly like IPC measurements). Resolved
+    per cache directory so env-var changes (tests, tooling) take effect."""
+    base = ipc_cache.cache_dir()
+    if base is None:
+        return None
+    return _store_at(gpu, three_state, base)
+
+
+def _solve_key(prof_ws) -> str:
+    return "|".join(f"{content_digest(p)}:{w}" for p, w in prof_ws)
 
 
 @functools.lru_cache(maxsize=200000)
@@ -85,15 +118,47 @@ def _compositions(w: int, k: int):
 class MarkovModel:
     """Homogeneous or heterogeneous Markov model over stall-class states."""
 
-    def __init__(self, gpu: GPUSpec, three_state: bool = True):
+    def __init__(self, gpu: GPUSpec, three_state: bool = True,
+                 persist: bool = True):
         # three_state=False collapses mem_u into mem_c (paper's base model,
         # Fig. 10 ablation: 'wrongly assuming coalesced accesses only')
         self.gpu = gpu
         self.three_state = three_state
-        # KernelProfile is a frozen (hashable) dataclass, so solved IPCs are
-        # memoized per (profiles, splits) — benchmarks and the scheduler
-        # re-ask for the same configurations constantly
-        self._ipc_cache = {}
+        # KernelProfile/GPUSpec are frozen (hashable) dataclasses, so solved
+        # IPCs are memoized module-wide per (gpu, model, profiles, splits) —
+        # benchmarks and the per-run_policy scheduler instances re-ask for
+        # the same configurations constantly. With persist=True solves are
+        # also kept in the on-disk artifact store across processes.
+        self._persist = persist
+
+    # ---- solve-cache plumbing (module memo + persistent store) ---- #
+    def _cached_solve(self, kind, mem_key, prof_ws, solve):
+        hit = _SOLVES.get(mem_key)
+        if hit is not None:
+            return hit
+        store = (_solve_store(self.gpu, self.three_state)
+                 if self._persist else None)
+        skey = _solve_key(prof_ws) if store is not None else None
+        if store is not None:
+            raw = store.get(kind, skey)
+            if raw is not None:
+                val = tuple(raw) if kind == "pair" else float(raw)
+                _SOLVES[mem_key] = val
+                return val
+        val = solve()
+        _SOLVES[mem_key] = val
+        if store is not None:
+            store.put(kind, skey,
+                      list(val) if kind == "pair" else float(val))
+        return val
+
+    def flush(self) -> None:
+        """Write newly computed solves to the on-disk store (no-op when
+        nothing new was solved or persistence is off)."""
+        store = (_solve_store(self.gpu, self.three_state)
+                 if self._persist else None)
+        if store is not None:
+            store.save()
 
     def _classes(self, prof):
         cls = stall_classes(prof)
@@ -221,30 +286,36 @@ class MarkovModel:
     def single_ipc(self, prof: KernelProfile, w: Optional[int] = None) -> float:
         """Modeled IPC, Eq. 4 (scaled by peak_ipc to the paper's axis)."""
         w = w if w is not None else prof.active_units(self.gpu)
-        key = (prof, w)
-        if key not in self._ipc_cache:
+
+        def solve():
             P, ready, rd = self._build([prof], [w])
             pi = self._steady_state(P)
-            self._ipc_cache[key] = (float(pi @ ready[0]) / float(pi @ rd)
-                                    * self.gpu.peak_ipc)
-        return self._ipc_cache[key]
+            return float(pi @ ready[0]) / float(pi @ rd) * self.gpu.peak_ipc
+
+        return self._cached_solve(
+            "single", (self.gpu, self.three_state, prof, w),
+            [(prof, w)], solve)
 
     def pair_ipc(self, p1: KernelProfile, w1: int, p2: KernelProfile,
                  w2: int):
         """(cIPC_1, cIPC_2), Eqs. 5-7."""
-        key = (p1, w1, p2, w2)
-        if key not in self._ipc_cache:
+
+        def solve():
             P, ready, rd = self._build([p1, p2], [w1, w2])
             pi = self._steady_state(P)
             cyc = float(pi @ rd)
-            self._ipc_cache[key] = (
-                float(pi @ ready[0]) / cyc * self.gpu.peak_ipc,
-                float(pi @ ready[1]) / cyc * self.gpu.peak_ipc)
-        return self._ipc_cache[key]
+            return (float(pi @ ready[0]) / cyc * self.gpu.peak_ipc,
+                    float(pi @ ready[1]) / cyc * self.gpu.peak_ipc)
+
+        return self._cached_solve(
+            "pair", (self.gpu, self.three_state, p1, w1, p2, w2),
+            [(p1, w1), (p2, w2)], solve)
 
     def pair_ipc_many(self, configs):
         """configs: [(p1, w1, p2, w2)] -> [(cIPC_1, cIPC_2)] (memoized)."""
-        return [self.pair_ipc(*c) for c in configs]
+        out = [self.pair_ipc(*c) for c in configs]
+        self.flush()
+        return out
 
 
 # --------------------------------------------------------------------- #

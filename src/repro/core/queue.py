@@ -105,6 +105,10 @@ def run_policy(policy: str, profiles: Dict[str, KernelProfile],
     pend = _Pending(profiles, order)
     total, n_cos, n_slices = 0.0, 0, 0.0
     log = []
+    # one generator for the whole run: re-seeding per iteration would make
+    # MC draw the identical pair/split forever
+    rng = (mc_rng if mc_rng is not None
+           else np.random.default_rng(seed)) if policy == "MC" else None
 
     if policy in ("KERNELET", "OPT"):
         sched = KerneletScheduler(
@@ -139,7 +143,6 @@ def run_policy(policy: str, profiles: Dict[str, KernelProfile],
             continue
 
         if policy == "MC":
-            rng = mc_rng or np.random.default_rng(seed)
             if len(act) >= 2:
                 n1, n2 = rng.choice(act, size=2, replace=False)
                 p1, p2 = profiles[n1], profiles[n2]

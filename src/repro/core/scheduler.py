@@ -157,6 +157,11 @@ class KerneletScheduler:
         hit = self._decision_cache.get(key)
         if hit is None:
             hit = self._search(names)
+            # persist any fresh Markov solves this search produced: the
+            # module-level solve cache already dedupes across the
+            # per-run_policy scheduler instances, the store dedupes across
+            # processes (no-op when nothing new was solved)
+            self.model.flush()
             self._decision_cache[key] = hit
         return hit
 

@@ -12,20 +12,22 @@ Granularity matches the model: one scheduling unit = one thread block.
 
 Measurement path layout (the hot path of the whole repro):
 
-  * ``simulate`` — vectorized single-configuration run. Per-unit constants
-    (R_m, coal, dep_ratio) are gathered once instead of being rebuilt from
-    the profile objects every round, and the per-round scatter updates use
-    ``bincount``/indexed stores. RNG draws go through ``_DrawStream`` in the
-    exact order the pre-refactor scalar loop consumed them, so results are
-    bit-identical to ``simulate_reference`` at a fixed seed.
-  * ``simulate_many`` — batched steady-state sweep over many
-    (profiles, units) configurations in one round loop, each configuration
-    on its own seeded stream: per-config results are bit-identical to a
-    standalone ``simulate`` call, independent of batch composition. This is
-    what lets an entire IPC-table row (all W splits of a pair) be measured
-    in a single call.
+  * ``simulate_many`` — batched sweep over many (profiles, units)
+    configurations in one round loop, each configuration on its own seeded
+    stream: per-config results are bit-identical to a standalone
+    ``simulate`` call, independent of batch composition. Supports both
+    steady-state and *makespan mode* per configuration (per-config alive
+    masks retire thread blocks until each block budget drains), so an
+    entire IPC-table row and a slice-granular replay sweep alike run in a
+    single call.
+  * ``simulate`` — single-configuration convenience wrapper: a batch of
+    one through the same inner loop.
+  * ``simulate_many_sharded`` — the same sweep fanned out across worker
+    processes (``REPRO_SWEEP_WORKERS``); valid because per-config streams
+    make results independent of batch composition, so any sharding returns
+    identical values.
   * ``simulate_reference`` — the pre-refactor scalar implementation, kept
-    verbatim as the equivalence oracle for tests.
+    verbatim as the equivalence oracle for tests (both modes).
   * ``IPCTable`` — measurement cache with an optional content-addressed
     on-disk store (``repro.core.ipc_cache``) so identical measurements are
     never repeated across processes.
@@ -33,12 +35,15 @@ Measurement path layout (the hot path of the whole repro):
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.profiles import GPUSpec, KernelProfile
 from repro.core import ipc_cache
+
+ENV_SWEEP_WORKERS = "REPRO_SWEEP_WORKERS"
 
 
 @dataclasses.dataclass
@@ -48,30 +53,6 @@ class SimResult:
     instructions: list      # per-kernel instructions issued
     pur: list               # per-kernel pipeline utilization ratio
     mur: list               # per-kernel memory utilization ratio
-
-
-class _DrawStream:
-    """Buffered uniform draws with the same stream semantics as successive
-    ``rng.random(n)`` calls (numpy Generators fill arrays from consecutive
-    bit-generator output, so chunked prefetch preserves the sequence)."""
-
-    __slots__ = ("_rng", "_chunk", "_buf", "_pos")
-
-    def __init__(self, rng: np.random.Generator, chunk: int = 1 << 15):
-        self._rng = rng
-        self._chunk = chunk
-        self._buf = np.empty(0, dtype=np.float64)
-        self._pos = 0
-
-    def take(self, n: int) -> np.ndarray:
-        pos = self._pos
-        if pos + n > self._buf.size:
-            tail = self._buf[pos:]
-            need = max(self._chunk, n - tail.size)
-            self._buf = np.concatenate([tail, self._rng.random(need)])
-            pos = 0
-        self._pos = pos + n
-        return self._buf[pos:pos + n]
 
 
 def _setup_units(profiles, units, blocks, insns_per_block):
@@ -108,108 +89,65 @@ def simulate(profiles, units, gpu: GPUSpec, *, seed: int = 0,
     If ``blocks`` is given, runs in makespan mode: unit slots retire blocks
     (insns_per_block instructions each) until the per-kernel block budget is
     exhausted; otherwise measures steady-state IPC over ``rounds``.
+
+    A batch of one through ``simulate_many``'s inner loop — bit-identical
+    to ``simulate_reference`` at a fixed seed in both modes.
     """
-    if blocks is None:
-        # steady state is the batched sweep with a batch of one — a single
-        # shared inner loop, bit-identical to the scalar reference
-        return simulate_many([(profiles, units)], gpu, seed=seed,
-                             rounds=rounds)[0]
-    nk = len(profiles)
-    owner, rem_ins, blocks_left, ipb = _setup_units(
-        profiles, units, blocks, insns_per_block)
-    nu = owner.size
-    # per-unit constants, gathered once (the old loop rebuilt these from the
-    # profile objects every round)
-    rm_u = np.array([p.rm for p in profiles])[owner]
-    coal_u = np.array([p.coal for p in profiles])[owner]
-    dep_u = np.array([getattr(p, "dep_ratio", 0.0) for p in profiles])[owner]
-
-    rem_lat = np.zeros(nu, dtype=np.float64)
-    uncoal = np.zeros(nu, dtype=bool)
-    mem_pend = np.zeros(nu, dtype=bool)   # stalled on memory (vs dep)
-    alive = np.ones(nu, dtype=bool)
-
-    stream = _DrawStream(np.random.default_rng(seed))
-    instr = np.zeros(nk)
-    mem_reqs = np.zeros(nk)
-    uf = gpu.uncoal_factor
-    cycles = 0.0
-    # makespan mode from here on (steady state returned above): the loop
-    # runs until every unit retires its block budget
-    while alive.any():
-        ready = alive & (rem_lat <= 0)
-        n_ready = int(ready.sum())
-        dur = max(n_ready, 1)
-        if n_ready:
-            idx = np.where(ready)[0]
-            ks = owner[idx]
-            instr += np.bincount(ks, minlength=nk)
-            rem_ins[idx] -= 1.0
-            # stalls: memory (coalesced / uncoalesced) or pipeline dependency
-            rms = rm_u[idx]
-            u = stream.take(n_ready)
-            mem_stall = u < rms
-            dep_stall = (~mem_stall) & (u < rms + dep_u[idx])
-            is_uncoal = mem_stall & (stream.take(n_ready) >= coal_u[idx])
-            n_req_now = float((mem_pend[alive]).sum()
-                              + uncoal[alive & mem_pend].sum() * (uf - 1))
-            lat_c = gpu.mem_latency + gpu.contention * n_req_now
-            st_idx = idx[mem_stall]
-            rem_lat[st_idx] = np.where(is_uncoal[mem_stall],
-                                       lat_c * uf, lat_c)
-            uncoal[st_idx] = is_uncoal[mem_stall]
-            mem_pend[st_idx] = True
-            dp_idx = idx[dep_stall]
-            rem_lat[dp_idx] = gpu.dep_latency
-            mem_pend[dp_idx] = False
-            mem_reqs += np.bincount(
-                ks[mem_stall],
-                weights=np.where(is_uncoal[mem_stall], uf, 1.0),
-                minlength=nk)
-        # advance time
-        cycles += dur
-        rem_lat = np.maximum(rem_lat - dur, 0.0)
-        mem_pend &= rem_lat > 0
-        # block retirement
-        done = alive & (rem_ins <= 0) & (rem_lat <= 0)
-        for i in np.where(done)[0]:
-            k = owner[i]
-            if blocks_left[k] > 0:
-                blocks_left[k] -= 1
-                rem_ins[i] = ipb[k]
-            else:
-                alive[i] = False
-    return _finish(instr, mem_reqs, cycles, nk, gpu)
+    return simulate_many(
+        [(profiles, units)], gpu, seed=seed, rounds=rounds,
+        blocks=None if blocks is None else [list(blocks)],
+        insns_per_block=(None if insns_per_block is None
+                         else [list(insns_per_block)]))[0]
 
 
 def simulate_many(configs: Sequence[Tuple[Sequence[KernelProfile],
                                           Sequence[int]]],
-                  gpu: GPUSpec, *, seed: int = 0,
-                  rounds: int = 20000) -> list:
-    """Batched steady-state sweep: one round loop advances every
-    (profiles, units) configuration at once.
+                  gpu: GPUSpec, *, seed: int = 0, rounds: int = 20000,
+                  blocks: Optional[Sequence[Optional[Sequence[float]]]] = None,
+                  insns_per_block: Optional[Sequence] = None) -> list:
+    """Batched sweep: one round loop advances every (profiles, units)
+    configuration at once.
 
     Each configuration runs on its own RNG stream seeded with ``seed``, so
     result ``i`` is bit-identical to
-    ``simulate(configs[i][0], configs[i][1], gpu, seed=seed, rounds=rounds)``
+    ``simulate(configs[i][0], configs[i][1], gpu, seed=seed, ...)``
     regardless of which other configurations share the batch — batched
     measurements are therefore safe to cache under per-configuration keys.
-    Steady-state only (no makespan mode). Returns a list of SimResult.
+
+    ``blocks`` (optional) selects *makespan mode* per configuration: entry
+    ``i`` is either None (steady-state over ``rounds``) or a per-kernel
+    block-budget list; ``insns_per_block`` follows the same shape. Makespan
+    configurations keep a per-config alive mask: unit slots retire blocks
+    until the budget drains, the config stops accumulating cycles (and
+    consuming draws) once every unit has retired, and steady-state
+    configurations freeze after exactly ``rounds`` rounds — mixed batches
+    are therefore safe. Returns a list of SimResult.
     """
     nc = len(configs)
     if nc == 0:
         return []
+    blocks_l = list(blocks) if blocks is not None else [None] * nc
+    ipb_l = (list(insns_per_block) if insns_per_block is not None
+             else [None] * nc)
+    if len(blocks_l) != nc or len(ipb_l) != nc:
+        raise ValueError("blocks/insns_per_block must have one entry "
+                         "per config")
     # flatten all units of all configs into one state vector
     cfg_of, owner_g, rm_l, coal_l, dep_l = [], [], [], [], []
+    rem_ins_l, blk_left_l, ipb_g = [], [], []
     kbase = []          # first global kernel id of each config
     nk_of = []
     kb = 0
     for c, (profiles, units) in enumerate(configs):
-        owner_c, _, _, _ = _setup_units(profiles, units, None, None)
+        owner_c, rem_ins_c, blocks_left_c, ipb_c = _setup_units(
+            profiles, units, blocks_l[c], ipb_l[c])
         kbase.append(kb)
         nk_of.append(len(profiles))
         cfg_of.extend([c] * owner_c.size)
         owner_g.extend((kb + owner_c).tolist())
+        rem_ins_l.extend(rem_ins_c.tolist())
+        blk_left_l.extend(blocks_left_c)
+        ipb_g.extend(ipb_c)
         rm = np.array([p.rm for p in profiles])
         co = np.array([p.coal for p in profiles])
         dp = np.array([getattr(p, "dep_ratio", 0.0) for p in profiles])
@@ -222,8 +160,12 @@ def simulate_many(configs: Sequence[Tuple[Sequence[KernelProfile],
     rm_u = np.asarray(rm_l)
     coal_u = np.asarray(coal_l)
     dep_u = np.asarray(dep_l)
+    rem_ins = np.asarray(rem_ins_l, dtype=np.float64)
+    blk_left = blk_left_l                 # per global kernel (inf = steady)
     nu = owner_g.size
     nk_total = kb
+    is_ms = np.asarray([b is not None for b in blocks_l], dtype=bool)
+    any_ms = bool(is_ms.any())
     # unit index range of each config (units are laid out config-major)
     cfg_starts = np.searchsorted(cfg_of, np.arange(nc))
     cfg_sizes = np.diff(np.append(cfg_starts, nu))
@@ -233,12 +175,15 @@ def simulate_many(configs: Sequence[Tuple[Sequence[KernelProfile],
     rem_lat = np.zeros(nu, dtype=np.float64)
     uncoal = np.zeros(nu, dtype=bool)
     mem_pend = np.zeros(nu, dtype=bool)
+    alive = np.ones(nu, dtype=bool)
+    ms_unit = is_ms[cfg_of]               # units in makespan-mode configs
 
     # Per-config RNG streams, prefetched into one 2D buffer so every round's
     # draws come from a single fancy-indexed gather instead of a Python loop
-    # over configs. Each config consumes its stream exactly as simulate()'s
-    # random(n)-then-random(n) sequence (numpy Generators fill arrays from
-    # consecutive bit-generator output, so chunked prefetch preserves it).
+    # over configs. Each config consumes its stream exactly as the scalar
+    # reference's random(n)-then-random(n) sequence (numpy Generators fill
+    # arrays from consecutive bit-generator output, so chunked prefetch
+    # preserves it).
     rngs = [np.random.default_rng(seed) for _ in range(nc)]
     chunk = max(4096, 8 * int(cfg_sizes.max()))
     buf = np.empty((nc, chunk))
@@ -253,18 +198,35 @@ def simulate_many(configs: Sequence[Tuple[Sequence[KernelProfile],
     mem_reqs = np.zeros(nk_total)
     cycles = np.zeros(nc)
     uf = gpu.uncoal_factor
-    for _ in range(rounds):
-        ready = rem_lat <= 0
+    r = 0
+    while True:
+        if any_ms:
+            # per-config liveness: makespan configs run until every unit
+            # retired its budget, steady-state ones exactly `rounds` rounds
+            alive_c = np.add.reduceat(alive.view(np.int8), cfg_starts) > 0
+            running = np.where(is_ms, alive_c, r < rounds)
+            if not running.any():
+                break
+            ready = alive & running[cfg_of] & (rem_lat <= 0)
+        else:
+            if r >= rounds:
+                break
+            ready = rem_lat <= 0
+        r += 1
         # per-config segment counts (reduceat over the config-major layout;
         # int8 view — reduceat on bool would compute logical-or, not counts,
         # and segments are <= 127 units so int8 cannot overflow)
         n_ready_c = np.add.reduceat(ready.view(np.int8),
                                     cfg_starts).astype(np.int64)
         dur_c = np.maximum(n_ready_c, 1)
+        if any_ms:
+            dur_c = np.where(running, dur_c, 0)
         idx = np.where(ready)[0]          # config-major (units contiguous)
         if idx.size:
             ks = owner_g[idx]
             instr += np.bincount(ks, minlength=nk_total)
+            if any_ms:
+                rem_ins[idx] -= 1.0
             need = 2 * n_ready_c
             short = np.where(pos + need > chunk)[0]
             for c in short:               # amortized: every ~chunk/2U rounds
@@ -285,9 +247,11 @@ def simulate_many(configs: Sequence[Tuple[Sequence[KernelProfile],
             mem_stall = u < rms
             dep_stall = (~mem_stall) & (u < rms + dep_u[idx])
             is_uncoal = mem_stall & (v >= coal_u[idx])
-            # per-config memory contention (all units alive in steady state)
-            req_c = (np.add.reduceat(mem_pend.astype(np.int64), cfg_starts)
-                     + np.add.reduceat((mem_pend & uncoal).astype(np.int64),
+            # per-config memory contention over *alive* units (all units
+            # are alive in steady state)
+            pend_a = mem_pend & alive if any_ms else mem_pend
+            req_c = (np.add.reduceat(pend_a.astype(np.int64), cfg_starts)
+                     + np.add.reduceat((pend_a & uncoal).astype(np.int64),
                                        cfg_starts)
                      * (uf - 1))
             lat_base = gpu.mem_latency + gpu.contention * req_c
@@ -309,6 +273,18 @@ def simulate_many(configs: Sequence[Tuple[Sequence[KernelProfile],
         np.subtract(rem_lat, np.repeat(dur_c, cfg_sizes), out=rem_lat)
         np.maximum(rem_lat, 0.0, out=rem_lat)
         mem_pend &= rem_lat > 0
+        # block retirement (makespan configs only): refill a retired slot
+        # from the kernel's remaining budget or kill it, in unit order —
+        # the same event order as the scalar reference
+        if any_ms:
+            done = alive & ms_unit & (rem_ins <= 0) & (rem_lat <= 0)
+            for i in np.where(done)[0]:
+                k = owner_g[i]
+                if blk_left[k] > 0:
+                    blk_left[k] -= 1
+                    rem_ins[i] = ipb_g[k]
+                else:
+                    alive[i] = False
 
     out = []
     for c in range(nc):
@@ -317,6 +293,80 @@ def simulate_many(configs: Sequence[Tuple[Sequence[KernelProfile],
         out.append(_finish(instr[sl], mem_reqs[sl], float(cycles[c]),
                            nk, gpu))
     return out
+
+
+# --------------------------------------------------------------------- #
+# sharded sweeps: the same batch fanned out across worker processes
+# --------------------------------------------------------------------- #
+def sweep_workers() -> int:
+    """Worker-process count for large sweeps (``REPRO_SWEEP_WORKERS``);
+    1 (the default) keeps everything in-process."""
+    raw = os.environ.get(ENV_SWEEP_WORKERS, "")
+    try:
+        n = int(raw.strip() or "1")
+    except ValueError:
+        return 1
+    return max(1, n)
+
+
+def _sweep_shard(payload):
+    """Worker entry point (module-level for pickling)."""
+    cfgs, gpu, seed, rounds = payload
+    return simulate_many(cfgs, gpu, seed=seed, rounds=rounds)
+
+
+# below this many configs a sweep is not worth worker-process startup (the
+# online decision path measures a handful of configs at a time; spawning
+# interpreters for those would invert the latency win)
+MIN_SHARD_CONFIGS = 32
+
+
+def simulate_many_sharded(configs, gpu: GPUSpec, *, seed: int = 0,
+                          rounds: int = 20000,
+                          workers: Optional[int] = None) -> list:
+    """``simulate_many`` sharded across worker processes.
+
+    Because every configuration runs on its own seeded stream, results are
+    independent of batch composition — any contiguous sharding returns
+    exactly the values of the single-process sweep, in the same order.
+    Worker count comes from ``workers`` or the ``REPRO_SWEEP_WORKERS`` env
+    var; env-derived sharding only kicks in above ``MIN_SHARD_CONFIGS``
+    (an explicit ``workers`` argument is always honored), and degraded
+    environments (no spawn) fall back in-process with a warning.
+    Steady-state sweeps only (the IPC-table build path).
+    """
+    n = len(configs)
+    if workers is None:
+        workers = sweep_workers() if n >= MIN_SHARD_CONFIGS else 1
+    workers = min(max(1, int(workers)), n)
+    if workers <= 1:
+        return simulate_many(configs, gpu, seed=seed, rounds=rounds)
+    import concurrent.futures as cf
+    import multiprocessing as mp
+    bounds = np.linspace(0, n, workers + 1).astype(int)
+    shards = [list(configs[bounds[i]:bounds[i + 1]])
+              for i in range(workers) if bounds[i] < bounds[i + 1]]
+    try:
+        # spawn, not fork: the host process may carry XLA/BLAS thread
+        # pools by the time a sweep runs, and forking a multi-threaded
+        # process can deadlock (and is deprecated in 3.12+)
+        ctx = mp.get_context("spawn")
+        with cf.ProcessPoolExecutor(max_workers=len(shards),
+                                    mp_context=ctx) as ex:
+            parts = list(ex.map(
+                _sweep_shard, [(s, gpu, seed, rounds) for s in shards]))
+    except (OSError, ImportError, cf.process.BrokenProcessPool,
+            mp.ProcessError) as e:
+        # sandboxed / spawn-less environments (or a crashed worker):
+        # parallelism is an optimization, never a correctness dependency —
+        # but don't be silent about an N-times-slower sweep. Exceptions
+        # raised *by the simulation itself* inside a worker keep their
+        # type and propagate normally.
+        import warnings
+        warnings.warn(f"sharded sweep fell back in-process ({e!r})",
+                      RuntimeWarning, stacklevel=2)
+        return simulate_many(configs, gpu, seed=seed, rounds=rounds)
+    return [res for part in parts for res in part]
 
 
 def simulate_reference(profiles, units, gpu: GPUSpec, *, seed: int = 0,
@@ -412,7 +462,8 @@ class IPCTable:
     content-addressed on-disk store shared across processes — see
     ``repro.core.ipc_cache`` for the key scheme and the ``REPRO_IPC_CACHE``
     override. ``solo_many``/``pair_many`` measure all missing entries of a
-    batch in a single ``simulate_many`` sweep.
+    batch in a single ``simulate_many`` sweep, sharded across worker
+    processes when ``REPRO_SWEEP_WORKERS`` > 1.
     """
 
     def __init__(self, gpu: GPUSpec, seed: int = 0, rounds: int = 12000,
@@ -444,8 +495,8 @@ class IPCTable:
     # ---- batched measurement core ---- #
     def _measure(self, specs):
         """specs: list of (key_kind, in-mem key, [(prof, w), ...]). Measures
-        every spec missing from both cache layers in one simulate_many call
-        and fills both layers."""
+        every spec missing from both cache layers in one (possibly sharded)
+        simulate_many sweep and fills both layers."""
         missing, queued = [], set()
         for kind, key, prof_ws in specs:
             mem = self._solo if kind == "solo" else self._pair
@@ -460,8 +511,8 @@ class IPCTable:
         if missing:
             cfgs = [([p for p, _ in prof_ws], [w for _, w in prof_ws])
                     for _, _, prof_ws in missing]
-            results = simulate_many(cfgs, self.gpu, seed=self.seed,
-                                    rounds=self.rounds)
+            results = simulate_many_sharded(cfgs, self.gpu, seed=self.seed,
+                                            rounds=self.rounds)
             for (kind, key, prof_ws), res in zip(missing, results):
                 mem = self._solo if kind == "solo" else self._pair
                 val = (res.ipcs[0] if kind == "solo"
@@ -506,8 +557,9 @@ class IPCTable:
     def prefill(self, profiles):
         """The paper's pre-execution step: measure the full table — every
         kernel's solo IPC at its occupancy plus every ordered pair at every
-        feasible split — in one batched sweep. Afterwards any solo()/pair()
-        query a scheduler or replay can make is a cache hit.
+        feasible split — in one batched (optionally sharded) sweep.
+        Afterwards any solo()/pair() query a scheduler or replay can make
+        is a cache hit.
 
         profiles: dict or iterable of KernelProfile.
         """

@@ -12,7 +12,8 @@ from repro.core.profiles import C2050, KernelProfile
 from repro.core.queue import _Pending, make_workload, run_policy
 from repro.core.scheduler import KerneletScheduler
 from repro.core.simulator import (IPCTable, simulate, simulate_many,
-                                  simulate_reference)
+                                  simulate_many_sharded, simulate_reference,
+                                  sweep_workers)
 
 GPU = C2050
 VG = GPU.virtual()
@@ -78,6 +79,100 @@ def test_simulate_many_rejects_empty_config(profs):
     p = profs["PC"]
     with pytest.raises(ValueError):
         simulate_many([([p], [0])], VG, rounds=10)
+
+
+# ------------------------------------------------------------------ #
+# batched makespan mode
+# ------------------------------------------------------------------ #
+def test_simulate_many_makespan_matches_reference(profs):
+    """Batched makespan-mode results are bit-identical to the scalar
+    reference on a seeded sweep (the ISSUE 2 acceptance pin)."""
+    rng = np.random.default_rng(11)
+    pairs = [("PC", "TEA"), ("SPMV", "MM"), ("SAD", "BS"), ("ST", "MRIQ")]
+    cfgs, blks, ipbs = [], [], []
+    for a, b in pairs:
+        cfgs.append(([profs[a], profs[b]], [2, 2]))
+        blks.append([int(rng.integers(3, 16)), int(rng.integers(3, 16))])
+        ipbs.append([float(rng.integers(20, 90)),
+                     float(rng.integers(20, 90))])
+    for seed in (0, 5):
+        batch = simulate_many(cfgs, VG, seed=seed, blocks=blks,
+                              insns_per_block=ipbs)
+        for (ps, us), bl, ipb, res in zip(cfgs, blks, ipbs, batch):
+            ref = simulate_reference(ps, us, VG, seed=seed, blocks=bl,
+                                     insns_per_block=ipb)
+            assert res.cycles == ref.cycles
+            assert res.ipcs == ref.ipcs
+            assert res.instructions == ref.instructions
+            assert res.mur == ref.mur
+
+
+def test_simulate_many_mixed_modes(profs):
+    """Makespan and steady-state configs share one batch; each stays
+    bit-identical to its standalone simulate() run (per-config alive masks
+    and round budgets are independent)."""
+    cfgs = [([profs["SPMV"], profs["MM"]], [2, 2]),
+            ([profs["PC"]], [4]),
+            ([profs["SAD"], profs["TEA"]], [1, 3])]
+    blks = [[15, 20], None, [12, 7]]
+    ipbs = [[90.0, 120.0], None, [80.0, 40.0]]
+    batch = simulate_many(cfgs, VG, seed=5, rounds=ROUNDS, blocks=blks,
+                          insns_per_block=ipbs)
+    for (ps, us), bl, ipb, res in zip(cfgs, blks, ipbs, batch):
+        solo = simulate(ps, us, VG, seed=5, rounds=ROUNDS, blocks=bl,
+                        insns_per_block=ipb)
+        assert res.cycles == solo.cycles and res.ipcs == solo.ipcs
+
+
+def test_simulate_many_blocks_shape_mismatch(profs):
+    with pytest.raises(ValueError):
+        simulate_many([([profs["PC"]], [2])], VG, blocks=[[4], [4]])
+
+
+# ------------------------------------------------------------------ #
+# sharded sweeps
+# ------------------------------------------------------------------ #
+def test_sharded_sweep_identical_to_single_process(profs):
+    import itertools
+    names = sorted(profs)[:5]
+    row = [([profs[a], profs[b]], [w, 4 - w])
+           for a, b in itertools.combinations(names, 2) for w in (1, 2, 3)]
+    single = simulate_many(row, VG, seed=0, rounds=800)
+    sharded = simulate_many_sharded(row, VG, seed=0, rounds=800, workers=2)
+    assert len(single) == len(sharded)
+    for s, t in zip(single, sharded):
+        assert s.ipcs == t.ipcs and s.cycles == t.cycles and s.mur == t.mur
+
+
+def test_sweep_workers_env(monkeypatch):
+    monkeypatch.delenv("REPRO_SWEEP_WORKERS", raising=False)
+    assert sweep_workers() == 1
+    monkeypatch.setenv("REPRO_SWEEP_WORKERS", "4")
+    assert sweep_workers() == 4
+    monkeypatch.setenv("REPRO_SWEEP_WORKERS", "not-a-number")
+    assert sweep_workers() == 1
+    monkeypatch.setenv("REPRO_SWEEP_WORKERS", "-3")
+    assert sweep_workers() == 1
+
+
+def test_sharded_prefill_byte_identical_cache(profs, tmp_path, monkeypatch):
+    """A sharded 2-worker prefill produces byte-identical cache content to
+    the single-process sweep (the ISSUE 2 acceptance pin): per-config RNG
+    streams make results batch-composition-independent, and the parent
+    inserts results in spec order regardless of shard boundaries."""
+    subset = {n: profs[n] for n in sorted(profs)[:4]}
+    paths = {}
+    for workers, sub in (("1", "single"), ("2", "sharded")):
+        d = tmp_path / sub
+        monkeypatch.setenv("REPRO_IPC_CACHE", str(d))
+        monkeypatch.setenv("REPRO_SWEEP_WORKERS", workers)
+        t = IPCTable(VG, rounds=400)
+        t.prefill(subset)
+        files = [f for f in sorted(d.iterdir()) if f.name.startswith("ipc_")]
+        assert len(files) == 1
+        paths[sub] = files[0]
+    assert paths["single"].name == paths["sharded"].name
+    assert paths["single"].read_bytes() == paths["sharded"].read_bytes()
 
 
 # ------------------------------------------------------------------ #

@@ -1,0 +1,147 @@
+"""Property-based tests (hypothesis) on the workload engine: pending-queue
+conservation, drain-phase bounds, run_policy termination/determinism, and
+batched makespan-mode equivalence against the scalar reference simulator.
+
+Kept separate from tests/test_properties.py so these run without importing
+jax (the workload engine is pure numpy).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")           # degrade gracefully without it
+from hypothesis import given, settings, strategies as st
+
+from repro.core.profiles import C2050, KernelProfile
+from repro.core.queue import _Pending, _coexec_phase, make_workload, \
+    run_policy
+from repro.core.simulator import (IPCTable, simulate_many,
+                                  simulate_reference)
+
+GPU = C2050
+VG = GPU.virtual()
+
+
+def prof(name, rm, coal=1.0, dep=0.0, blocks=512, ipb=200.0, occ=1.0,
+         pur=0.5, mur=0.1):
+    return KernelProfile(name, rm=rm, coal=coal, insns_per_block=ipb,
+                         num_blocks=blocks, occupancy=occ, pur=pur,
+                         mur=mur, dep_ratio=dep)
+
+
+# ------------------------------------------------------------------ #
+# _Pending: blocks conserved across drain
+# ------------------------------------------------------------------ #
+@given(st.lists(st.sampled_from("ABC"), min_size=1, max_size=12),
+       st.lists(st.floats(0.0, 50.0), min_size=1, max_size=30))
+@settings(max_examples=60, deadline=None)
+def test_pending_conserves_blocks(order, drains):
+    profiles = {n: prof(n, 0.1, blocks=7) for n in "ABC"}
+    pend = _Pending(profiles, order)
+    initial = sum(pend.blocks.values())
+    drained = 0.0
+    names = list(pend.blocks)
+    for i, d in enumerate(drains):
+        n = names[i % len(names)]
+        before = pend.blocks[n]
+        pend.drain(n, d)
+        drained += before - pend.blocks[n]       # actual removal, clamped
+        assert pend.blocks[n] >= 0.0
+    assert sum(pend.blocks.values()) + drained == pytest.approx(initial)
+    # drained kernels leave the queue, never to reappear
+    for n in names:
+        if pend.blocks[n] <= 0:
+            assert n not in pend.order
+
+
+# ------------------------------------------------------------------ #
+# _coexec_phase: never drains more than the remaining blocks
+# ------------------------------------------------------------------ #
+@given(st.floats(0.1, 5000.0), st.floats(0.1, 5000.0),
+       st.floats(0.01, 4.0), st.floats(0.01, 4.0),
+       st.integers(1, 512), st.integers(1, 512))
+@settings(max_examples=100, deadline=None)
+def test_coexec_phase_bounded(b1, b2, c1, c2, s1, s2):
+    p1 = prof("A", 0.1, ipb=150.0)
+    p2 = prof("B", 0.2, ipb=300.0)
+    t, d1, d2, slices = _coexec_phase(p1, b1, p2, b2, c1, c2, s1, s2, GPU)
+    assert 0.0 <= d1 <= b1 + 1e-9
+    assert 0.0 <= d2 <= b2 + 1e-9
+    assert t >= 0.0 and slices >= 0.0
+    # the phase ends when one side empties
+    assert d1 == pytest.approx(b1, rel=1e-9) or \
+        d2 == pytest.approx(b2, rel=1e-9)
+
+
+# ------------------------------------------------------------------ #
+# run_policy: terminates, conserves work, deterministic per seed
+# ------------------------------------------------------------------ #
+@st.composite
+def small_workloads(draw):
+    nk = draw(st.integers(2, 3))
+    profiles = {}
+    for i in range(nk):
+        name = "K%d" % i
+        profiles[name] = prof(
+            name,
+            rm=draw(st.floats(0.005, 0.5)),
+            coal=draw(st.sampled_from([1.0, 0.3])),
+            blocks=draw(st.integers(20, 120)),
+            ipb=float(draw(st.integers(50, 400))),
+            pur=draw(st.floats(0.05, 1.0)),
+            mur=draw(st.floats(0.0, 0.3)),
+        )
+    instances = draw(st.integers(1, 4))
+    seed = draw(st.integers(0, 2 ** 16))
+    return profiles, instances, seed
+
+
+@pytest.mark.parametrize("policy", ["BASE", "KERNELET", "OPT", "MC"])
+@given(wl=small_workloads())
+@settings(max_examples=8, deadline=None)
+def test_run_policy_terminates_and_deterministic(policy, wl):
+    profiles, instances, seed = wl
+    truth = IPCTable(VG, rounds=400, persist=False)
+    order = make_workload(profiles, sorted(profiles), instances=instances,
+                          seed=seed)
+    a = run_policy(policy, profiles, order, GPU, truth, seed=seed)
+    b = run_policy(policy, profiles, order, GPU, truth, seed=seed)
+    assert a.total_cycles > 0.0 and np.isfinite(a.total_cycles)
+    assert a.total_cycles == b.total_cycles       # deterministic per seed
+    assert a.n_coschedules == b.n_coschedules
+    assert a.n_slices == b.n_slices
+
+
+# ------------------------------------------------------------------ #
+# batched makespan mode == scalar reference (bit-identical)
+# ------------------------------------------------------------------ #
+@st.composite
+def makespan_configs(draw):
+    nk = draw(st.integers(1, 2))
+    profiles, units, blocks, ipb = [], [], [], []
+    for i in range(nk):
+        profiles.append(prof(
+            "K%d" % i,
+            rm=draw(st.floats(0.005, 0.6)),
+            coal=draw(st.sampled_from([1.0, 0.4])),
+            dep=draw(st.sampled_from([0.0, 0.2])),
+        ))
+        units.append(draw(st.integers(1, 3)))
+        blocks.append(draw(st.integers(1, 25)))
+        ipb.append(float(draw(st.integers(5, 60))))
+    return profiles, units, blocks, ipb
+
+
+@given(cfgs=st.lists(makespan_configs(), min_size=1, max_size=3),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_batched_makespan_matches_reference(cfgs, seed):
+    batch = simulate_many([(p, u) for p, u, _, _ in cfgs], VG, seed=seed,
+                          blocks=[b for _, _, b, _ in cfgs],
+                          insns_per_block=[i for _, _, _, i in cfgs])
+    for (p, u, b, i), res in zip(cfgs, batch):
+        ref = simulate_reference(p, u, VG, seed=seed, blocks=b,
+                                 insns_per_block=i)
+        assert res.cycles == ref.cycles
+        assert res.ipcs == ref.ipcs
+        assert res.instructions == ref.instructions
+        assert res.mur == ref.mur
