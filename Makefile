@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-fast bench clean-cache
+.PHONY: test bench-fast bench bench-smoke gc-cache clean-cache
 
 # tier-1 verification (ROADMAP.md)
 test:
@@ -15,6 +15,17 @@ bench-fast:
 bench:
 	$(PYTHON) -m benchmarks.run
 
-# drop persisted IPC measurements (content-addressed; safe to delete)
+# perf-trajectory guard (what the CI bench-smoke job runs): reduced
+# sweeps + history-schema validation, pure numpy
+bench-smoke:
+	$(PYTHON) -m benchmarks.decision_latency --smoke
+	$(PYTHON) -m benchmarks.replay_throughput --smoke
+
+# drop artifact-store files written under dead schema versions
+gc-cache:
+	$(PYTHON) -c "from repro.core.ipc_cache import ArtifactStore; \
+	print('\n'.join(ArtifactStore.gc()) or 'nothing to collect')"
+
+# drop persisted measurements/decisions (content-addressed; safe to delete)
 clean-cache:
 	rm -rf artifacts/ipc_cache

@@ -38,6 +38,7 @@ import time
 
 import numpy as np
 
+from benchmarks import history_schema
 from repro.core import markov
 from repro.core.calibrate import calibrated_benchmarks
 from repro.core.profiles import C2050, WORKLOADS
@@ -47,6 +48,14 @@ from repro.core.simulator import IPCTable, simulate, simulate_many
 MEASURE_ROUNDS = 12000
 HISTORY_PATH = os.path.join("benchmarks", "history",
                             "decision_latency.jsonl")
+
+# the history schema: a run that loses any of these fields fails CI smoke
+REQUIRED_FIELDS = (
+    "rounds", "cold_find_us", "warm_find_us", "oracle_cold_find_us",
+    "oracle_warm_find_us", "pair_measure_scalar_us",
+    "pair_measure_batched_us", "batch_speedup", "startup_cold_us",
+    "startup_warm_us", "startup_speedup",
+)
 
 
 def _time_us(fn, repeat: int = 3) -> float:
@@ -167,35 +176,36 @@ def bench(rounds: int = MEASURE_ROUNDS) -> dict:
     return rec
 
 
+DELTA_KEYS = ("warm_find_us", "pair_measure_batched_us", "startup_warm_us")
+
+
+def validate_record(rec: dict) -> None:
+    history_schema.validate_record(rec, REQUIRED_FIELDS, "decision_latency")
+
+
+def validate_history(path: str = HISTORY_PATH) -> int:
+    return history_schema.validate_history(path, REQUIRED_FIELDS)
+
+
 def record_history(rec: dict, path: str = HISTORY_PATH) -> dict:
-    """Append a bench record to the tracked history (one JSON object per
-    line) with deltas against the previous entry; returns the line."""
-    prev = None
-    try:
-        with open(path) as f:
-            for line in f:
-                line = line.strip()
-                if line:
-                    prev = json.loads(line)
-    except (OSError, ValueError):
-        pass
-    entry = dict(rec)
-    entry.pop("headline", None)
-    entry["recorded_at"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
-    if prev is not None:
-        deltas = {}
-        for k in ("warm_find_us", "pair_measure_batched_us",
-                  "startup_warm_us"):
-            if k in prev and k in entry and prev[k]:
-                deltas[k] = round(entry[k] / prev[k], 3)
-        entry["vs_prev"] = deltas
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    with open(path, "a") as f:
-        f.write(json.dumps(entry, default=float) + "\n")
-    return entry
+    return history_schema.record_history(rec, path, DELTA_KEYS)
 
 
 if __name__ == "__main__":
-    rec = bench()
-    record_history(rec)
-    print(json.dumps(rec, indent=1))
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced rounds; validate record + history schema "
+                         "instead of appending")
+    args = ap.parse_args()
+    if args.smoke:
+        rec = bench(rounds=2000)
+        validate_record(rec)
+        n = validate_history()
+        print(json.dumps(rec["headline"], indent=1))
+        print(f"smoke OK: record schema valid, {n} history entries valid")
+    else:
+        rec = bench()
+        validate_record(rec)
+        record_history(rec)
+        print(json.dumps(rec, indent=1))

@@ -1,0 +1,65 @@
+"""Shared plumbing for the tracked perf-trajectory histories.
+
+Each benchmark that grows a ``benchmarks/history/*.jsonl`` trajectory
+declares its ``REQUIRED_FIELDS`` schema and delta keys; this module owns
+the one implementation of record validation, history validation (what the
+CI ``bench-smoke`` job fails on), and the append-with-deltas writer — so
+the schema contract cannot drift between benchmarks.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Sequence
+
+
+def validate_record(rec: dict, required: Sequence[str], name: str) -> None:
+    missing = [k for k in required if k not in rec]
+    if missing:
+        raise ValueError(f"{name} record missing fields: {missing}")
+
+
+def validate_history(path: str, required: Sequence[str]) -> int:
+    """Every history line must parse and carry the full schema; returns the
+    number of validated entries (0 when no history exists yet)."""
+    try:
+        with open(path) as f:
+            lines = [ln.strip() for ln in f if ln.strip()]
+    except OSError:
+        return 0
+    for i, ln in enumerate(lines):
+        entry = json.loads(ln)
+        missing = [k for k in tuple(required) + ("recorded_at",)
+                   if k not in entry]
+        if missing:
+            raise ValueError(f"{path}:{i + 1} missing fields: {missing}")
+    return len(lines)
+
+
+def record_history(rec: dict, path: str,
+                   delta_keys: Sequence[str]) -> dict:
+    """Append a bench record (one JSON object per line) with ratios against
+    the previous entry under ``vs_prev``; returns the appended entry."""
+    prev = None
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    prev = json.loads(line)
+    except (OSError, ValueError):
+        pass
+    entry = dict(rec)
+    entry.pop("headline", None)
+    entry["recorded_at"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    if prev is not None:
+        deltas = {}
+        for k in delta_keys:
+            if k in prev and k in entry and prev[k]:
+                deltas[k] = round(entry[k] / prev[k], 3)
+        entry["vs_prev"] = deltas
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, default=float) + "\n")
+    return entry

@@ -1,0 +1,226 @@
+"""Replay-throughput benchmark: policy/seed sweeps, scalar loop vs engine.
+
+The workload metric of the paper (§5.4) is produced by replaying Poisson
+mixes under each policy. Before the workload engine, a sweep over N
+(policy, seed) configurations paid N scalar ``run_policy`` drain loops in N
+cold processes: per configuration, the calibration read, the measurement-
+table load, the scheduler build, and the full candidate search. The engine
+(``repro.core.engine``) replays all N lanes in one process — batching the
+measurement lookups, sharing one scheduler per decision identity, and
+reading decisions from the persistent cache (``REPRO_DECISION_CACHE``).
+
+This bench pins that trajectory:
+
+  * ``baseline_scalar_s`` — sequential ``run_policy_reference`` per lane,
+    in-process caches dropped before each (the pre-engine one-process-per-
+    configuration sweep), decision cache off (it did not exist), artifact
+    stores warm on disk (the PR 2 state).
+  * ``engine_cold_s`` — one engine batch, cold process, decision store
+    empty: searches run once per distinct active set and are persisted.
+  * ``engine_warm_s`` — one engine batch, cold process, decision store
+    warm: the steady state of a fleet — zero candidate searches.
+  * ``lanes_per_s`` / ``sim_cycles_per_s`` — engine replay throughput.
+  * ``equivalent`` — every engine lane compared bit-identical to its
+    scalar reference run (a hard failure otherwise: speed never buys
+    different results).
+
+Every non-smoke run appends to the tracked history at
+``benchmarks/history/replay_throughput.jsonl``; ``--smoke`` runs a reduced
+sweep and validates the record and history schema instead (the CI guard
+against silently rotting perf trajectories).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+from benchmarks import history_schema
+from repro.core import markov
+from repro.core.calibrate import calibrated_benchmarks
+from repro.core.engine import LaneSpec, WorkloadEngine
+from repro.core.profiles import C2050
+from repro.core.queue import make_workload, run_policy_reference
+from repro.core.scheduler import _decision_store_at
+from repro.core.simulator import IPCTable
+
+HISTORY_PATH = os.path.join("benchmarks", "history",
+                            "replay_throughput.jsonl")
+
+POLICIES = ("BASE", "KERNELET", "OPT", "MC")
+NAMES = ["PC", "TEA", "MM", "SPMV"]
+
+# the history schema: a run that loses any of these fields fails CI smoke
+REQUIRED_FIELDS = (
+    "lanes", "instances", "rounds", "baseline_scalar_s", "engine_cold_s",
+    "engine_warm_s", "speedup_cold", "speedup_warm", "lanes_per_s",
+    "sim_cycles_per_s", "equivalent",
+)
+
+
+def _fresh_process_state() -> None:
+    """Drop every in-process cache layer so the next call behaves like a
+    new process: only the on-disk artifact stores stay warm."""
+    calibrated_benchmarks.cache_clear()
+    markov._SOLVES.clear()
+    markov._store_at.cache_clear()
+    _decision_store_at.cache_clear()
+
+
+def _lane_args(lanes: int, instances: int):
+    """(policy, order-seed) grid: policies cycle fastest, so any prefix of
+    the grid is a mixed-policy batch."""
+    out = []
+    for i in range(lanes):
+        policy = POLICIES[i % len(POLICIES)]
+        out.append((policy, i // len(POLICIES), i))
+    return out
+
+
+def bench(lanes: int = 16, instances: int = 40, rounds: int = 2500) -> dict:
+    gpu = C2050
+    vg = gpu.virtual()
+    if lanes < 1:
+        raise ValueError("need at least one lane")
+
+    prev_ipc = os.environ.get("REPRO_IPC_CACHE")
+    prev_dec = os.environ.get("REPRO_DECISION_CACHE")
+    with tempfile.TemporaryDirectory() as tmp:
+        os.environ["REPRO_IPC_CACHE"] = tmp
+        try:
+            # ---- prep: warm the measurement-side stores (PR 2 state) ----
+            _fresh_process_state()
+            profs_all = calibrated_benchmarks(gpu)
+            profs = {n: profs_all[n] for n in NAMES}
+            IPCTable(vg, rounds=rounds).prefill(profs)
+            markov.MarkovModel(vg).flush()
+            orders = {}
+            for _, oseed, _ in _lane_args(lanes, instances):
+                if oseed not in orders:
+                    orders[oseed] = make_workload(
+                        profs, NAMES, instances=instances, seed=oseed)
+
+            def lane_specs(truth):
+                # reads the enclosing `profs` at call time, so each engine
+                # run replays with the profiles its own "process" calibrated
+                return [LaneSpec(policy, profs, orders[oseed], gpu, truth,
+                                 seed=lseed)
+                        for policy, oseed, lseed in
+                        _lane_args(lanes, instances)]
+
+            # ---- baseline: one cold scalar process per configuration ----
+            os.environ["REPRO_DECISION_CACHE"] = "0"
+            base_results, t_base = [], 0.0
+            for policy, oseed, lseed in _lane_args(lanes, instances):
+                _fresh_process_state()
+                t0 = time.perf_counter()
+                p = calibrated_benchmarks(gpu)      # every process profiles
+                lane_profs = {n: p[n] for n in NAMES}
+                truth = IPCTable(vg, rounds=rounds)  # and loads its table
+                base_results.append(run_policy_reference(
+                    policy, lane_profs, orders[oseed], gpu, truth,
+                    seed=lseed))
+                t_base += time.perf_counter() - t0
+            os.environ.pop("REPRO_DECISION_CACHE", None)
+
+            # ---- engine, cold decision store ----
+            _fresh_process_state()
+            t0 = time.perf_counter()
+            profs = {n: calibrated_benchmarks(gpu)[n] for n in NAMES}
+            truth = IPCTable(vg, rounds=rounds)
+            engine = WorkloadEngine()
+            cold_results = engine.run(lane_specs(truth))
+            t_cold = time.perf_counter() - t0
+
+            # ---- engine, warm decision store (the fleet steady state) ----
+            _fresh_process_state()
+            t0 = time.perf_counter()
+            profs = {n: calibrated_benchmarks(gpu)[n] for n in NAMES}
+            truth = IPCTable(vg, rounds=rounds)
+            engine = WorkloadEngine()
+            warm_results = engine.run(lane_specs(truth))
+            t_warm = time.perf_counter() - t0
+        finally:
+            for var, prev in (("REPRO_IPC_CACHE", prev_ipc),
+                              ("REPRO_DECISION_CACHE", prev_dec)):
+                if prev is None:
+                    os.environ.pop(var, None)
+                else:
+                    os.environ[var] = prev
+            _fresh_process_state()
+
+    equivalent = all(
+        e.total_cycles == b.total_cycles
+        and e.n_coschedules == b.n_coschedules and e.n_slices == b.n_slices
+        for e, b in zip(warm_results, base_results)) and all(
+        e.total_cycles == c.total_cycles
+        for e, c in zip(warm_results, cold_results))
+    if not equivalent:
+        raise AssertionError(
+            "engine lanes diverged from run_policy_reference")
+
+    sim_cycles = float(sum(r.total_cycles for r in warm_results))
+    rec = {
+        "lanes": lanes,
+        "instances": instances,
+        "rounds": rounds,
+        "policies": list(POLICIES),
+        "baseline_scalar_s": round(t_base, 4),
+        "engine_cold_s": round(t_cold, 4),
+        "engine_warm_s": round(t_warm, 4),
+        "speedup_cold": round(t_base / max(t_cold, 1e-9), 1),
+        "speedup_warm": round(t_base / max(t_warm, 1e-9), 1),
+        "lanes_per_s": round(lanes / max(t_warm, 1e-9), 1),
+        "sim_cycles_per_s": round(sim_cycles / max(t_warm, 1e-9), 1),
+        "equivalent": equivalent,
+        "engine_stats": dict(engine.stats),
+    }
+    rec["headline"] = {
+        "speedup_warm": rec["speedup_warm"],
+        "speedup_cold": rec["speedup_cold"],
+        "lanes_per_s": rec["lanes_per_s"],
+        "claim": "fleet replays amortize decisions and batch measurement: "
+                 "N-lane sweeps cost ~one lane, bit-identical per lane",
+    }
+    validate_record(rec)
+    return rec
+
+
+# ---- schema guards (CI smoke) ---- #
+DELTA_KEYS = ("engine_warm_s", "lanes_per_s", "speedup_warm")
+
+
+def validate_record(rec: dict) -> None:
+    history_schema.validate_record(rec, REQUIRED_FIELDS,
+                                   "replay_throughput")
+
+
+def validate_history(path: str = HISTORY_PATH) -> int:
+    return history_schema.validate_history(path, REQUIRED_FIELDS)
+
+
+def record_history(rec: dict, path: str = HISTORY_PATH) -> dict:
+    return history_schema.record_history(rec, path, DELTA_KEYS)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep; validate record + history schema "
+                         "instead of appending")
+    ap.add_argument("--lanes", type=int, default=16)
+    ap.add_argument("--instances", type=int, default=40)
+    ap.add_argument("--rounds", type=int, default=2500)
+    args = ap.parse_args()
+    if args.smoke:
+        rec = bench(lanes=8, instances=10, rounds=600)
+        n = validate_history()
+        print(json.dumps(rec["headline"], indent=1))
+        print(f"smoke OK: record schema valid, {n} history entries valid")
+    else:
+        rec = bench(lanes=args.lanes, instances=args.instances,
+                    rounds=args.rounds)
+        record_history(rec)
+        print(json.dumps(rec, indent=1))

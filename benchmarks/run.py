@@ -29,11 +29,13 @@ def main() -> None:
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks.paper_figs import ALL_FIGS
-    from benchmarks import decision_latency, tpu_coschedule
+    from benchmarks import decision_latency, replay_throughput, \
+        tpu_coschedule
 
     benches = dict(ALL_FIGS)
     benches["tpu_coschedule"] = tpu_coschedule.bench
     benches["decision_latency"] = decision_latency.bench
+    benches["replay_throughput"] = replay_throughput.bench
     if args.only:
         benches = {k: v for k, v in benches.items() if k == args.only}
 
@@ -46,14 +48,19 @@ def main() -> None:
             rec = fn(n_mc=100)
         elif args.fast and name == "decision_latency":
             rec = fn(rounds=2000)
+        elif args.fast and name == "replay_throughput":
+            rec = fn(lanes=8, instances=10, rounds=600)
         else:
             rec = fn()
         dt = time.time() - t0
         with open(os.path.join(args.out, name + ".json"), "w") as f:
             json.dump(rec, f, indent=1, default=float)
-        if name == "decision_latency" and not args.fast:
-            # grow the tracked perf trajectory (point samples -> history)
-            decision_latency.record_history(rec)
+        if not args.fast:
+            # grow the tracked perf trajectories (point samples -> history)
+            if name == "decision_latency":
+                decision_latency.record_history(rec)
+            elif name == "replay_throughput":
+                replay_throughput.record_history(rec)
         print(f"{name},{dt * 1e6:.0f},{_headline_str(rec)}")
 
 

@@ -2,9 +2,70 @@
 
 Four tenants submit jobs with different compute/memory profiles; the
 scheduler pairs complementary ones and interleaves their microbatch slices.
+The drain runs on the workload engine (``repro.core.engine``): a simulated
+replay lane first predicts the makespan and warms the shared decision
+cache, then the dispatcher executes with every decision a cache hit.
 
-  PYTHONPATH=src python examples/multi_tenant_serving.py
+  PYTHONPATH=src python examples/multi_tenant_serving.py              # real dispatch (compiles with jax)
+  PYTHONPATH=src python examples/multi_tenant_serving.py --fleet 4    # pure-simulation multi-pod replay (no jax)
 """
-from repro.launch.serve import demo
+import argparse
+import dataclasses
+import sys
+import time
 
-demo()
+
+def fleet_replay(n_pods: int) -> None:
+    """Replay the demo tenant mix over a simulated fleet of shared pods —
+    one engine batch, one measurement service, one decision cache. Builds
+    the tenant profiles analytically (compiled cost analysis is not needed
+    for the replay), so this path never imports jax."""
+    from repro.configs import SHAPES, get_config
+    from repro.core.costs import cell_cost
+    from repro.core.engine import WorkloadEngine, run_fleet
+    from repro.core.profiles import TPU_V5E, tpu_profile_from_costs
+    from repro.core.simulator import IPCTable
+
+    tenants = [  # (name, arch, phase, slices) — the demo() mix
+        ("tenantA-phi3-prefill", "phi3-mini-3.8b", "prefill", 24),
+        ("tenantB-dsv2-decode", "deepseek-v2-236b", "decode", 24),
+        ("tenantC-rwkv-prefill", "rwkv6-1.6b", "prefill", 16),
+        ("tenantD-sc2-decode", "starcoder2-15b", "decode", 16),
+    ]
+    shape_of = {"prefill": "prefill_32k", "decode": "decode_32k",
+                "train": "train_4k"}
+    profiles = {}
+    for name, arch, phase, slices in tenants:
+        cost = cell_cost(get_config(arch), SHAPES[shape_of[phase]])
+        prof = tpu_profile_from_costs(name, cost["flops"],
+                                      cost["hbm_bytes"], num_blocks=slices)
+        profiles[name] = dataclasses.replace(
+            prof, insns_per_block=1000.0, num_blocks=slices)
+    truth = IPCTable(TPU_V5E.virtual(), rounds=1500, persist=False)
+    order = [name for name, *_ in tenants]
+    engine = WorkloadEngine()
+    t0 = time.perf_counter()
+    fleet = run_fleet("KERNELET", profiles, order, TPU_V5E, truth, n_pods,
+                      alpha_p=0.2, alpha_m=0.2, engine=engine)
+    dt = time.perf_counter() - t0
+    print(f"fleet of {n_pods} pods: makespan {fleet.makespan:.0f} cycles, "
+          f"{fleet.n_coschedules} co-schedules, replay took {dt * 1e3:.1f}ms")
+    for g, lane in enumerate(fleet.lanes):
+        events = ", ".join(ev for _, ev in lane.time_line)
+        print(f"  pod{g}: {lane.total_cycles:.0f} cycles  [{events}]")
+    print(f"engine: {engine.stats['steps']} steps, "
+          f"{engine.stats['pair_lookups']} pair + "
+          f"{engine.stats['solo_lookups']} solo lookups batched")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fleet", type=int, default=0, metavar="N_PODS",
+                    help="simulated multi-pod fleet replay instead of "
+                         "real dispatch")
+    args = ap.parse_args()
+    if args.fleet:
+        fleet_replay(args.fleet)
+        sys.exit(0)
+    from repro.launch.serve import demo
+    demo()

@@ -32,17 +32,21 @@ from repro.core.profiles import (GPUSpec, KernelProfile, content_digest,
 # bump when the calibration procedure changes in a way that alters profiles
 _CALIB_SCHEMA = 1
 
+# the store's effective version folds in the Markov schema: calibration
+# inverts model solves, so a physics change must invalidate stored
+# profiles too (single source of truth — ipc_cache.live_schemas() reads
+# this for GC)
+CALIB_STORE_SCHEMA = _CALIB_SCHEMA * 1000 + MARKOV_SCHEMA
+
 
 def _profile_store(gpu: GPUSpec):
-    """Per-GPU persistent store for calibrated profiles. The schema folds
-    in the Markov schema: calibration inverts model solves, so a physics
-    change must invalidate stored profiles too."""
+    """Per-GPU persistent store for calibrated profiles."""
     base = ipc_cache.cache_dir()
     if base is None:
         return None
     return ipc_cache.ArtifactStore(
         f"calib_{content_digest(gpu)}", ("profiles",),
-        schema=_CALIB_SCHEMA * 1000 + MARKOV_SCHEMA, dirname=base)
+        schema=CALIB_STORE_SCHEMA, dirname=base)
 
 
 def _invert(model: MarkovModel, base: KernelProfile, w: int,

@@ -1,0 +1,353 @@
+"""Vectorized, event-driven workload engine — fleet-scale policy replays.
+
+``run_policy``'s scalar drain loop serves exactly one (gpu, policy, seed,
+arrival-order) configuration per call: every policy/seed sweep and every
+multi-GPU replay pays the loop, the scheduler construction, and the
+candidate search once per configuration. This module replaces it with an
+engine that advances many independent replay *lanes* at once:
+
+  * **Lanes.** A lane is one full ``run_policy`` configuration (policy,
+    profiles, arrival order, GPU, measurement table, seed). Lanes are
+    independent by construction, so the engine can interleave their drain
+    events freely — per-lane results are bit-identical to the scalar
+    reference (``run_policy_reference``), pinned by tests.
+  * **Batched steps.** Each engine step takes one drain decision per active
+    lane, then (1) gathers every lane's pending measurement lookups and
+    resolves them in single ``solo_many``/``pair_many`` sweeps per table
+    (one ``simulate_many`` batch, sharded across ``REPRO_SWEEP_WORKERS``
+    when large), and (2) charges all lanes' co-exec/solo phases in one
+    vectorized NumPy pass instead of per-lane scalar arithmetic.
+  * **Shared decisions.** Lanes with the same (gpu, profiles, alphas,
+    decision mode) share one ``KerneletScheduler``, so an active set
+    searched for lane 0 is a memo hit for lanes 1..N — and with the
+    persistent decision cache (``REPRO_DECISION_CACHE``) even a cold
+    process skips the search.
+  * **Fleets.** ``run_fleet`` splits one arrival stream across N GPUs that
+    share one measurement service and one decision cache — the multi-GPU /
+    multi-tenant serving shape (see ``repro.launch.serve``).
+
+The phase arithmetic is element-for-element the same IEEE-754 sequence as
+the scalar ``_coexec_phase``/``_solo_phase`` helpers, so batching changes
+wall-clock, never results.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.profiles import GPUSpec, KernelProfile
+from repro.core.queue import WorkloadResult, _Pending
+from repro.core.scheduler import KerneletScheduler
+from repro.core.simulator import IPCTable
+
+
+@dataclasses.dataclass
+class LaneSpec:
+    """One replay configuration: everything ``run_policy`` takes."""
+    policy: str
+    profiles: Dict[str, KernelProfile]
+    order: List[str]
+    gpu: GPUSpec
+    truth: IPCTable
+    alpha_p: float = 0.4
+    alpha_m: float = 0.1
+    seed: int = 0
+    mc_rng: Optional[object] = None
+    cp_margin: Optional[float] = None
+    label: Optional[str] = None
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """A homogeneous multi-GPU replay: per-GPU lane results plus the fleet
+    aggregates (makespan = slowest GPU, the workload-throughput metric)."""
+    lanes: List[WorkloadResult]
+    makespan: float
+    total_cycles: float
+    n_coschedules: int
+    n_slices: float
+
+
+class _Lane:
+    """Mutable replay state of one lane (mirrors the scalar loop's locals)."""
+
+    def __init__(self, spec: LaneSpec, sched: Optional[KerneletScheduler]):
+        self.spec = spec
+        self.pend = _Pending(spec.profiles, spec.order)
+        self.sched = sched
+        self.total = 0.0
+        self.n_cos = 0
+        self.n_slices = 0.0
+        self.log: list = []
+        # one generator for the whole lane (MC only): re-seeding per
+        # iteration would make MC draw the identical pair/split forever
+        self.rng = ((spec.mc_rng if spec.mc_rng is not None
+                     else np.random.default_rng(spec.seed))
+                    if spec.policy == "MC" else None)
+
+    def result(self) -> WorkloadResult:
+        return WorkloadResult(self.spec.policy, self.total, self.n_cos,
+                              self.n_slices, self.log)
+
+
+# one decision per lane per step; co-exec and solo phases are charged in
+# separate vectorized passes, so an action is either "co" or "solo"
+@dataclasses.dataclass
+class _Action:
+    lane: _Lane
+    kind: str                       # "co" | "solo"
+    event: str                      # log line template (no totals yet)
+    count: bool                     # count n_coschedules / n_slices?
+    n1: str = ""
+    n2: Optional[str] = None
+    p1: Optional[KernelProfile] = None
+    p2: Optional[KernelProfile] = None
+    w1: int = 0
+    w2: int = 0
+    s1: float = 1.0                 # co: slice sizes; solo: 0 = unsliced
+    s2: float = 1.0
+    b1: float = 0.0
+    b2: float = 0.0
+    solo_w: Optional[int] = None    # solo: explicit units (None = default)
+
+
+class WorkloadEngine:
+    """Advances a batch of replay lanes to completion in batched steps."""
+
+    def __init__(self):
+        self._schedulers: Dict = {}
+        # step/batch counters for benchmarks and docs (not part of results)
+        self.stats = {"steps": 0, "lanes": 0, "pair_lookups": 0,
+                      "solo_lookups": 0, "decisions": 0}
+
+    # ---- shared decision state ---- #
+    def scheduler_for(self, gpu: GPUSpec,
+                      profiles: Dict[str, KernelProfile], *,
+                      alpha_p: float = 0.4, alpha_m: float = 0.1,
+                      cp_margin: Optional[float] = None,
+                      decision_table: Optional[IPCTable] = None
+                      ) -> KerneletScheduler:
+        """One scheduler per decision identity, shared by every lane (and
+        external caller, e.g. the serving dispatcher) with that identity:
+        in-memory decisions dedupe across lanes, the persistent store
+        dedupes across processes. Oracle-mode identity is the *content* of
+        the decision table (gpu, seed, rounds), not the object."""
+        mode = (("oracle", decision_table.gpu, decision_table.seed,
+                 decision_table.rounds)
+                if decision_table is not None else ("model",))
+        key = (gpu, frozenset(profiles.items()), alpha_p, alpha_m,
+               cp_margin, mode)
+        sched = self._schedulers.get(key)
+        if sched is None:
+            sched = KerneletScheduler(
+                gpu, profiles, alpha_p=alpha_p, alpha_m=alpha_m,
+                decision_table=decision_table, cp_margin=cp_margin)
+            self._schedulers[key] = sched
+        return sched
+
+    def _lane_scheduler(self, spec: LaneSpec) -> Optional[KerneletScheduler]:
+        if spec.policy not in ("KERNELET", "OPT"):
+            return None
+        return self.scheduler_for(
+            spec.gpu, spec.profiles, alpha_p=spec.alpha_p,
+            alpha_m=spec.alpha_m, cp_margin=spec.cp_margin,
+            decision_table=spec.truth if spec.policy == "OPT" else None)
+
+    # ---- decision phase (per lane, mirrors the scalar branch order) ---- #
+    def _decide(self, lane: _Lane) -> _Action:
+        spec = lane.spec
+        pend = lane.pend
+        act = pend.active()
+        profiles = spec.profiles
+        vg = spec.gpu.virtual()
+
+        if spec.policy == "BASE":
+            n1 = act[0]
+            p1 = profiles[n1]
+            w1 = p1.active_units(vg)
+            if w1 < vg.units_per_sm and len(act) > 1:
+                n2 = act[1]
+                p2 = profiles[n2]
+                w2 = min(vg.units_per_sm - w1, p2.active_units(vg))
+                return _Action(lane, "co", f"BASE:{n1}", False,
+                               n1=n1, n2=n2, p1=p1, p2=p2, w1=w1, w2=w2,
+                               s1=p1.num_blocks, s2=p2.num_blocks,
+                               b1=pend.blocks[n1], b2=pend.blocks[n2])
+            return _Action(lane, "solo", f"BASE:{n1}", False, n1=n1, p1=p1,
+                           b1=pend.blocks[n1], s1=0, solo_w=w1)
+
+        if spec.policy == "MC":
+            if len(act) >= 2:
+                rng = lane.rng
+                n1, n2 = rng.choice(act, size=2, replace=False)
+                p1, p2 = profiles[n1], profiles[n2]
+                W = vg.units_per_sm
+                w1 = int(rng.integers(1, W))
+                w1 = min(w1, p1.active_units(vg))
+                w2 = min(W - w1, p2.active_units(vg))
+                m1 = int(rng.integers(1, 9)) * spec.gpu.n_sm
+                m2 = int(rng.integers(1, 9)) * spec.gpu.n_sm
+                return _Action(lane, "co", f"mc:{n1}+{n2}@{w1}:{w2}", True,
+                               n1=n1, n2=n2, p1=p1, p2=p2, w1=w1, w2=w2,
+                               s1=m1, s2=m2,
+                               b1=pend.blocks[n1], b2=pend.blocks[n2])
+            n1 = act[0]
+            p1 = profiles[n1]
+            return _Action(lane, "solo", f"solo:{n1}", False, n1=n1, p1=p1,
+                           b1=pend.blocks[n1], s1=0)
+
+        # KERNELET / OPT
+        cs = lane.sched.find_coschedule(act)
+        self.stats["decisions"] += 1
+        if cs.k2 is None:
+            p1 = profiles[cs.k1]
+            return _Action(lane, "solo", f"solo:{cs.k1}", True, n1=cs.k1,
+                           p1=p1, b1=pend.blocks[cs.k1], s1=cs.s1)
+        p1, p2 = profiles[cs.k1], profiles[cs.k2]
+        return _Action(lane, "co", f"co:{cs.k1}+{cs.k2}@{cs.w1}:{cs.w2}",
+                       True, n1=cs.k1, n2=cs.k2, p1=p1, p2=p2,
+                       w1=cs.w1, w2=cs.w2, s1=cs.s1, s2=cs.s2,
+                       b1=pend.blocks[cs.k1], b2=pend.blocks[cs.k2])
+
+    # ---- measurement phase: batch all lanes' lookups per table ---- #
+    def _resolve_lookups(self, actions: Sequence[_Action]) -> None:
+        pair_by_table: Dict[int, dict] = {}
+        solo_by_table: Dict[int, dict] = {}
+        tables: Dict[int, IPCTable] = {}
+        for a in actions:
+            truth = a.lane.spec.truth
+            tables[id(truth)] = truth
+            if a.kind == "co":
+                pair_by_table.setdefault(id(truth), {})[
+                    (a.p1, a.w1, a.p2, a.w2)] = None
+            else:
+                w = (a.solo_w if a.solo_w is not None
+                     else a.p1.active_units(truth.gpu))
+                solo_by_table.setdefault(id(truth), {})[(a.p1, w)] = None
+        # dict-of-None keeps insertion order while deduping, so the batched
+        # call measures each missing config exactly once
+        for tid, items in solo_by_table.items():
+            tables[tid].solo_many(list(items))
+            self.stats["solo_lookups"] += len(items)
+        for tid, items in pair_by_table.items():
+            tables[tid].pair_many(list(items))
+            self.stats["pair_lookups"] += len(items)
+
+    # ---- charge phase: vectorized co-exec / solo arithmetic ---- #
+    @staticmethod
+    def _charge_co(actions: List[_Action]):
+        """All lanes' co-exec phases at once: element-for-element the same
+        float64 sequence as the scalar ``_coexec_phase``."""
+        get = np.asarray
+        b1 = get([a.b1 for a in actions], dtype=np.float64)
+        b2 = get([a.b2 for a in actions], dtype=np.float64)
+        cips = [a.lane.spec.truth.pair(a.p1, a.w1, a.p2, a.w2)
+                for a in actions]                       # cache hits
+        c1 = get([c[0] for c in cips], dtype=np.float64)
+        c2 = get([c[1] for c in cips], dtype=np.float64)
+        i1 = get([a.p1.insns_per_block for a in actions], dtype=np.float64)
+        i2 = get([a.p2.insns_per_block for a in actions], dtype=np.float64)
+        s1 = get([a.s1 for a in actions], dtype=np.float64)
+        s2 = get([a.s2 for a in actions], dtype=np.float64)
+        n_sm = get([a.lane.spec.gpu.n_sm for a in actions], dtype=np.float64)
+        lo = get([a.lane.spec.gpu.launch_overhead for a in actions],
+                 dtype=np.float64)
+        thr1 = c1 * n_sm / i1
+        thr2 = c2 * n_sm / i2
+        t1 = b1 / np.maximum(thr1, 1e-12)
+        t2 = b2 / np.maximum(thr2, 1e-12)
+        t = np.minimum(t1, t2)
+        d1 = np.minimum(b1, thr1 * t)
+        d2 = np.minimum(b2, thr2 * t)
+        sl = d1 / np.maximum(s1, 1) + d2 / np.maximum(s2, 1)
+        return t + sl * lo, d1, d2, sl
+
+    @staticmethod
+    def _charge_solo(actions: List[_Action]):
+        """All lanes' solo phases at once (``_solo_phase`` semantics;
+        slice size 0 means unsliced — one launch charge)."""
+        get = np.asarray
+        b = get([a.b1 for a in actions], dtype=np.float64)
+        ins = get([a.p1.insns_per_block for a in actions], dtype=np.float64)
+        ipcs = get([a.lane.spec.truth.solo(
+                        a.p1, a.solo_w if a.solo_w is not None else None)
+                    for a in actions], dtype=np.float64)   # cache hits
+        ss = get([a.s1 for a in actions], dtype=np.float64)
+        n_sm = get([a.lane.spec.gpu.n_sm for a in actions], dtype=np.float64)
+        lo = get([a.lane.spec.gpu.launch_overhead for a in actions],
+                 dtype=np.float64)
+        t = b * ins / np.maximum(ipcs * n_sm, 1e-12)
+        n_sl = np.where(ss > 0, b / np.maximum(ss, 1), 1.0)
+        return t + n_sl * lo, n_sl
+
+    # ---- main loop ---- #
+    def run(self, specs: Sequence[LaneSpec]) -> List[WorkloadResult]:
+        """Drain every lane; returns one ``WorkloadResult`` per spec, in
+        order — each bit-identical to ``run_policy_reference`` on the same
+        configuration."""
+        lanes = [_Lane(s, self._lane_scheduler(s)) for s in specs]
+        self.stats["lanes"] += len(lanes)
+        active = [ln for ln in lanes if ln.pend.active()]
+        while active:
+            self.stats["steps"] += 1
+            actions = [self._decide(ln) for ln in active]
+            self._resolve_lookups(actions)
+            co = [a for a in actions if a.kind == "co"]
+            solo = [a for a in actions if a.kind == "solo"]
+            if co:
+                t, d1, d2, sl = self._charge_co(co)
+                for j, a in enumerate(co):
+                    ln = a.lane
+                    ln.pend.drain(a.n1, d1[j])
+                    ln.pend.drain(a.n2, d2[j])
+                    ln.total = ln.total + t[j]
+                    if a.count:
+                        ln.n_cos += 1
+                        ln.n_slices = ln.n_slices + sl[j]
+                    ln.log.append((ln.total, a.event))
+            if solo:
+                t, n_sl = self._charge_solo(solo)
+                for j, a in enumerate(solo):
+                    ln = a.lane
+                    ln.pend.drain(a.n1, a.b1)
+                    ln.total = ln.total + t[j]
+                    if a.count:
+                        ln.n_slices = ln.n_slices + n_sl[j]
+                    ln.log.append((ln.total, a.event))
+            active = [ln for ln in active if ln.pend.active()]
+        return [ln.result() for ln in lanes]
+
+
+def run_lanes(specs: Sequence[LaneSpec]) -> List[WorkloadResult]:
+    """One-shot convenience: a fresh engine over ``specs``."""
+    return WorkloadEngine().run(specs)
+
+
+def run_fleet(policy: str, profiles: Dict[str, KernelProfile],
+              order: List[str], gpu: GPUSpec, truth: IPCTable,
+              n_gpus: int, *, alpha_p: float = 0.4, alpha_m: float = 0.1,
+              cp_margin: Optional[float] = None, seed: int = 0,
+              engine: Optional[WorkloadEngine] = None) -> FleetResult:
+    """Replay one arrival stream over a homogeneous fleet of ``n_gpus``
+    GPUs: arrivals are dealt round-robin (GPU g takes ``order[g::n_gpus]``,
+    the arrival-order analogue of least-loaded dispatch under the paper's
+    equal-rate Poisson mixes), every lane shares ``truth`` (one measurement
+    service) and, via the engine, one scheduler decision cache. The fleet
+    makespan — the slowest GPU's total — is the workload metric."""
+    if n_gpus < 1:
+        raise ValueError("n_gpus must be >= 1")
+    eng = engine if engine is not None else WorkloadEngine()
+    specs = [LaneSpec(policy=policy, profiles=profiles,
+                      order=list(order[g::n_gpus]), gpu=gpu, truth=truth,
+                      alpha_p=alpha_p, alpha_m=alpha_m,
+                      cp_margin=cp_margin, seed=seed + g, label=f"gpu{g}")
+             for g in range(n_gpus)]
+    results = eng.run(specs)
+    return FleetResult(
+        lanes=results,
+        makespan=float(max(r.total_cycles for r in results)),
+        total_cycles=float(sum(r.total_cycles for r in results)),
+        n_coschedules=sum(r.n_coschedules for r in results),
+        n_slices=float(sum(r.n_slices for r in results)))

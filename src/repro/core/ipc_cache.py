@@ -34,8 +34,9 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import tempfile
-from typing import Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.profiles import GPUSpec, content_digest
 
@@ -159,6 +160,60 @@ class ArtifactStore:
                     os.unlink(tmp)
                 except OSError:
                     pass
+
+
+    # ---- garbage collection ---- #
+    # every store file carries its schema version in the file name:
+    # keyed stores as ``<name>_v<schema>.json``, the historical flat IPC
+    # layout as ``ipc_v<schema>_<identity>.json`` — so dead generations can
+    # be collected from the names alone, without parsing payloads
+    _FILE_RE = re.compile(r"_v(\d+)(?:_|\.json$)")
+
+    @staticmethod
+    def gc(keep_schemas: Optional[Dict[str, int]] = None,
+           dirname: Optional[str] = None) -> List[str]:
+        """Delete store files written under a dead schema version.
+
+        ``keep_schemas`` maps a store family (the leading file-name token:
+        ``ipc``, ``markov``, ``calib``, ``decisions``) to its live schema;
+        defaults to ``live_schemas()``. Files of unknown families, or whose
+        version cannot be parsed, are left alone. Returns the removed paths
+        (empty when persistence is disabled or the directory is missing) —
+        the stores otherwise grow one dead file per schema bump forever.
+        """
+        if keep_schemas is None:
+            keep_schemas = live_schemas()
+        base = dirname if dirname is not None else cache_dir()
+        if base is None or not os.path.isdir(base):
+            return []
+        removed = []
+        for fname in sorted(os.listdir(base)):
+            if not fname.endswith(".json"):
+                continue
+            family = fname.split("_", 1)[0]
+            live = keep_schemas.get(family)
+            m = ArtifactStore._FILE_RE.search(fname)
+            if live is None or m is None or int(m.group(1)) == int(live):
+                continue
+            path = os.path.join(base, fname)
+            try:
+                os.unlink(path)
+                removed.append(path)
+            except OSError:
+                pass                      # best effort: gc is maintenance
+        return removed
+
+
+def live_schemas() -> Dict[str, int]:
+    """Current schema version per store family (lazy imports: the producer
+    modules import this one)."""
+    from repro.core import calibrate, markov, scheduler
+    return {
+        "ipc": _SCHEMA,
+        "markov": markov.MARKOV_SCHEMA,
+        "calib": calibrate.CALIB_STORE_SCHEMA,
+        "decisions": scheduler.DECISION_STORE_SCHEMA,
+    }
 
 
 class IPCCache(ArtifactStore):

@@ -72,9 +72,18 @@ class _Pending:
         return [n for n in self._order if self.blocks.get(n, 0) > 0]
 
     def drain(self, name, blocks):
-        self.blocks[name] = max(0.0, self.blocks[name] - blocks)
-        if self.blocks[name] <= 0:
+        cur = self.blocks.get(name)
+        if cur is None:
+            return                           # already retired: idempotent
+        left = max(0.0, cur - blocks)
+        if left <= 0:
+            # retire fully: a drained kernel leaves the queue *and* the
+            # block ledger (stale zero entries used to accumulate forever,
+            # which at fleet scale is an unbounded dict per lane)
             self._order.pop(name, None)
+            del self.blocks[name]
+        else:
+            self.blocks[name] = left
 
 
 def _coexec_phase(p1, b1, p2, b2, c1, c2, s1, s2, gpu):
@@ -101,6 +110,22 @@ def run_policy(policy: str, profiles: Dict[str, KernelProfile],
                order: List[str], gpu: GPUSpec, truth: IPCTable,
                *, alpha_p: float = 0.4, alpha_m: float = 0.1,
                seed: int = 0, mc_rng=None) -> WorkloadResult:
+    """Drain one workload under one policy — a single-lane run of the
+    vectorized workload engine (``repro.core.engine``), pinned bit-identical
+    to the scalar ``run_policy_reference`` implementation by tests."""
+    from repro.core.engine import LaneSpec, WorkloadEngine
+    spec = LaneSpec(policy=policy, profiles=profiles, order=order, gpu=gpu,
+                    truth=truth, alpha_p=alpha_p, alpha_m=alpha_m,
+                    seed=seed, mc_rng=mc_rng)
+    return WorkloadEngine().run([spec])[0]
+
+
+def run_policy_reference(policy: str, profiles: Dict[str, KernelProfile],
+                         order: List[str], gpu: GPUSpec, truth: IPCTable,
+                         *, alpha_p: float = 0.4, alpha_m: float = 0.1,
+                         seed: int = 0, mc_rng=None) -> WorkloadResult:
+    """Pre-engine scalar drain loop, kept verbatim as the per-lane
+    equivalence oracle: the engine must reproduce this bit-for-bit."""
     vg = gpu.virtual()
     pend = _Pending(profiles, order)
     total, n_cos, n_slices = 0.0, 0, 0.0
@@ -161,6 +186,9 @@ def run_policy(policy: str, profiles: Dict[str, KernelProfile],
                 total += t
                 n_slices += sl
                 n_cos += 1
+                # MC used to be the only policy that never logged, leaving
+                # its replay traces empty
+                log.append((total, f"mc:{n1}+{n2}@{w1}:{w2}"))
             else:
                 n1 = act[0]
                 p1 = profiles[n1]
@@ -168,6 +196,7 @@ def run_policy(policy: str, profiles: Dict[str, KernelProfile],
                 t, _ = _solo_phase(p1, pend.blocks[n1], ipc, gpu)
                 pend.drain(n1, pend.blocks[n1])
                 total += t
+                log.append((total, f"solo:{n1}"))
             continue
 
         # KERNELET / OPT

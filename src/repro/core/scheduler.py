@@ -10,16 +10,53 @@ simulated time — exactly the paper's prediction/measurement separation.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
+import os
 from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core import slicing
-from repro.core.markov import MarkovModel, balanced_slice_sizes, \
-    co_scheduling_profit
-from repro.core.profiles import GPUSpec, KernelProfile
+from repro.core import ipc_cache, slicing
+from repro.core.markov import MARKOV_SCHEMA, MarkovModel, \
+    balanced_slice_sizes, co_scheduling_profit
+from repro.core.profiles import GPUSpec, KernelProfile, content_digest
 from repro.core.simulator import IPCTable
+
+# ---- persistent decision cache ---- #
+# ``find_coschedule`` is a pure function of (gpu, profiles, active set,
+# alphas, overhead budget, decision mode), so decisions are content-
+# addressable exactly like IPC measurements and Markov solves: persisting
+# them lets a cold process skip the candidate search entirely.
+ENV_DECISION_CACHE = "REPRO_DECISION_CACHE"
+
+# bump when the search logic changes in a way that alters decisions
+DECISION_SCHEMA = 1
+
+# the store's effective version folds in the physics layers decisions are
+# derived from (Markov solves in model mode, simulator measurements in
+# oracle mode), so a physics bump can never serve a stale decision — same
+# pattern as calibrate.CALIB_STORE_SCHEMA; ipc_cache.live_schemas() reads
+# this for GC. One composed version for both modes keeps GC to a single
+# live generation per family (a Markov bump over-invalidates oracle files,
+# which only costs a re-search).
+DECISION_STORE_SCHEMA = (DECISION_SCHEMA * 1_000_000
+                         + MARKOV_SCHEMA * 1000 + ipc_cache._SCHEMA)
+
+
+def decision_cache_enabled() -> bool:
+    """Persistent decision caching toggle: on by default, disabled by
+    ``REPRO_DECISION_CACHE=0|off|none`` (storage shares the artifact-cache
+    directory, so ``REPRO_IPC_CACHE=0`` disables it too)."""
+    raw = os.environ.get(ENV_DECISION_CACHE, "1")
+    return raw.strip().lower() not in ("", "0", "off", "none", "disable")
+
+
+@functools.lru_cache(maxsize=64)
+def _decision_store_at(tag: str, dirname: str) -> ipc_cache.ArtifactStore:
+    return ipc_cache.ArtifactStore(
+        f"decisions_{tag}", ("coschedule",), schema=DECISION_STORE_SCHEMA,
+        dirname=dirname)
 
 
 @dataclasses.dataclass
@@ -33,6 +70,28 @@ class CoSchedule:
     cp: float                # predicted co-scheduling profit
     cipc1: float
     cipc2: float
+
+    @staticmethod
+    def _num(x):
+        """JSON-safe number that round-trips the exact value: slice sizes
+        are ints everywhere today, but a float must survive as a float (a
+        truncating int() here would break the replayed-decision
+        bit-identity contract)."""
+        xi = int(x)
+        return xi if xi == x else float(x)
+
+    def to_json(self) -> dict:
+        return {"k1": self.k1, "k2": self.k2,
+                "w1": self._num(self.w1), "w2": self._num(self.w2),
+                "s1": self._num(self.s1), "s2": self._num(self.s2),
+                "cp": float(self.cp), "cipc1": float(self.cipc1),
+                "cipc2": float(self.cipc2)}
+
+    @classmethod
+    def from_json(cls, raw: dict) -> "CoSchedule":
+        return cls(raw["k1"], raw["k2"], raw["w1"], raw["w2"],
+                   raw["s1"], raw["s2"], float(raw["cp"]),
+                   float(raw["cipc1"]), float(raw["cipc2"]))
 
 
 class KerneletScheduler:
@@ -64,6 +123,33 @@ class KerneletScheduler:
         # the search entirely (profiles are fixed for a scheduler's lifetime,
         # so the active set fully determines the decision)
         self._decision_cache: Dict = {}
+        # persistent-store identity: decisions depend on the GPU, the model
+        # variant (or, in oracle mode, the measurement table's identity) and
+        # the search parameters; the per-entry key carries the active set's
+        # profile contents
+        if decision_table is not None:
+            mode = (f"oracle_{content_digest(decision_table.gpu)}"
+                    f"_s{decision_table.seed}_r{decision_table.rounds}")
+        else:
+            mode = "model3s" if three_state else "model2s"
+        self._store_tag = f"{content_digest(gpu)}_{mode}"
+        self._param_key = (f"ap{self.alpha_p!r}_am{self.alpha_m!r}"
+                           f"_po{self.p_overhead!r}_cm{self.cp_margin!r}")
+
+    # ---- persistent decision-store plumbing ---- #
+    def _decision_store(self) -> Optional[ipc_cache.ArtifactStore]:
+        """Resolved per call so env changes (tests, tooling) take effect."""
+        if not decision_cache_enabled():
+            return None
+        base = ipc_cache.cache_dir()
+        if base is None:
+            return None
+        return _decision_store_at(self._store_tag, base)
+
+    def _decision_skey(self, names) -> str:
+        profs = "|".join(f"{n}:{content_digest(self.profiles[n])}"
+                         for n in names)
+        return f"{profs}|{self._param_key}"
 
     # ---- decision-side IPCs (model, or table for OPT) ---- #
     def solo_ipc(self, name: str, w: Optional[int] = None) -> float:
@@ -156,12 +242,27 @@ class KerneletScheduler:
         key = frozenset(names)
         hit = self._decision_cache.get(key)
         if hit is None:
-            hit = self._search(names)
-            # persist any fresh Markov solves this search produced: the
-            # module-level solve cache already dedupes across the
-            # per-run_policy scheduler instances, the store dedupes across
-            # processes (no-op when nothing new was solved)
-            self.model.flush()
+            store = self._decision_store()
+            skey = self._decision_skey(names) if store is not None else None
+            if store is not None:
+                raw = store.get("coschedule", skey)
+                if raw is not None:
+                    hit = CoSchedule.from_json(raw)
+            if hit is None:
+                hit = self._search(names)
+                # persist any fresh Markov solves this search produced: the
+                # module-level solve cache already dedupes across the
+                # per-run_policy scheduler instances, the store dedupes
+                # across processes (no-op when nothing new was solved)
+                self.model.flush()
+                if store is not None:
+                    # save eagerly: direct callers (serving dispatch, the
+                    # latency bench) have no end-of-run flush hook, and a
+                    # process sees only a handful of distinct active sets.
+                    # If that ever stops holding, batch like model.flush()
+                    # (ROADMAP: decision-store sharding / batched saves).
+                    store.put("coschedule", skey, hit.to_json())
+                    store.save()
             self._decision_cache[key] = hit
         return hit
 

@@ -311,8 +311,9 @@ def sweep_workers() -> int:
 
 def _sweep_shard(payload):
     """Worker entry point (module-level for pickling)."""
-    cfgs, gpu, seed, rounds = payload
-    return simulate_many(cfgs, gpu, seed=seed, rounds=rounds)
+    cfgs, gpu, seed, rounds, blocks, ipb = payload
+    return simulate_many(cfgs, gpu, seed=seed, rounds=rounds, blocks=blocks,
+                         insns_per_block=ipb)
 
 
 # below this many configs a sweep is not worth worker-process startup (the
@@ -323,28 +324,46 @@ MIN_SHARD_CONFIGS = 32
 
 def simulate_many_sharded(configs, gpu: GPUSpec, *, seed: int = 0,
                           rounds: int = 20000,
+                          blocks: Optional[Sequence] = None,
+                          insns_per_block: Optional[Sequence] = None,
                           workers: Optional[int] = None) -> list:
     """``simulate_many`` sharded across worker processes.
 
     Because every configuration runs on its own seeded stream, results are
     independent of batch composition — any contiguous sharding returns
     exactly the values of the single-process sweep, in the same order.
-    Worker count comes from ``workers`` or the ``REPRO_SWEEP_WORKERS`` env
-    var; env-derived sharding only kicks in above ``MIN_SHARD_CONFIGS``
-    (an explicit ``workers`` argument is always honored), and degraded
-    environments (no spawn) fall back in-process with a warning.
-    Steady-state sweeps only (the IPC-table build path).
+    That argument holds for *both* modes, so ``blocks``/``insns_per_block``
+    (per-config makespan budgets, same shape as in ``simulate_many``) shard
+    right alongside their configs: steady-state IPC-table builds and
+    slice-granular replay sweeps fan out the same way. Worker count comes
+    from ``workers`` or the ``REPRO_SWEEP_WORKERS`` env var; env-derived
+    sharding only kicks in above ``MIN_SHARD_CONFIGS`` (an explicit
+    ``workers`` argument is always honored), and degraded environments (no
+    spawn) fall back in-process with a warning.
     """
     n = len(configs)
+    blocks_l = list(blocks) if blocks is not None else None
+    ipb_l = list(insns_per_block) if insns_per_block is not None else None
+    for name, lst in (("blocks", blocks_l), ("insns_per_block", ipb_l)):
+        if lst is not None and len(lst) != n:
+            raise ValueError(f"{name} must have one entry per config")
     if workers is None:
         workers = sweep_workers() if n >= MIN_SHARD_CONFIGS else 1
     workers = min(max(1, int(workers)), n)
     if workers <= 1:
-        return simulate_many(configs, gpu, seed=seed, rounds=rounds)
+        return simulate_many(configs, gpu, seed=seed, rounds=rounds,
+                             blocks=blocks_l, insns_per_block=ipb_l)
     import concurrent.futures as cf
     import multiprocessing as mp
     bounds = np.linspace(0, n, workers + 1).astype(int)
-    shards = [list(configs[bounds[i]:bounds[i + 1]])
+
+    def _cut(lst, i):
+        if lst is None:
+            return None
+        return list(lst[bounds[i]:bounds[i + 1]])
+
+    shards = [(list(configs[bounds[i]:bounds[i + 1]]),
+               _cut(blocks_l, i), _cut(ipb_l, i))
               for i in range(workers) if bounds[i] < bounds[i + 1]]
     try:
         # spawn, not fork: the host process may carry XLA/BLAS thread
@@ -354,7 +373,8 @@ def simulate_many_sharded(configs, gpu: GPUSpec, *, seed: int = 0,
         with cf.ProcessPoolExecutor(max_workers=len(shards),
                                     mp_context=ctx) as ex:
             parts = list(ex.map(
-                _sweep_shard, [(s, gpu, seed, rounds) for s in shards]))
+                _sweep_shard,
+                [(s, gpu, seed, rounds, b, i) for s, b, i in shards]))
     except (OSError, ImportError, cf.process.BrokenProcessPool,
             mp.ProcessError) as e:
         # sandboxed / spawn-less environments (or a crashed worker):
@@ -365,7 +385,8 @@ def simulate_many_sharded(configs, gpu: GPUSpec, *, seed: int = 0,
         import warnings
         warnings.warn(f"sharded sweep fell back in-process ({e!r})",
                       RuntimeWarning, stacklevel=2)
-        return simulate_many(configs, gpu, seed=seed, rounds=rounds)
+        return simulate_many(configs, gpu, seed=seed, rounds=rounds,
+                             blocks=blocks_l, insns_per_block=ipb_l)
     return [res for part in parts for res in part]
 
 

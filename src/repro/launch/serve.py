@@ -11,6 +11,12 @@ slices on the shared mesh. On TPU the fused path is
 for correctness and the co-scheduling profit is reported from the
 TPU-adapted Markov model.
 
+Scheduling runs on the workload engine (``repro.core.engine``): the server
+first *plans* the drain as a simulated engine replay lane — yielding the
+predicted makespan and warming the shared decision cache (persisted across
+processes via ``REPRO_DECISION_CACHE``) — then dispatches real work with
+the same shared scheduler, so every dispatch-loop decision is a cache hit.
+
   PYTHONPATH=src python -m repro.launch.serve --demo
 """
 from __future__ import annotations
@@ -25,9 +31,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.core.engine import LaneSpec, WorkloadEngine
 from repro.core.markov import MarkovModel, co_scheduling_profit
 from repro.core.profiles import TPU_V5E, KernelProfile, tpu_profile_from_costs
-from repro.core.scheduler import KerneletScheduler
+from repro.core.simulator import IPCTable
 from repro.data.synthetic import make_batch
 from repro.models import transformer as T
 
@@ -54,6 +61,7 @@ class SharedPodServer:
         self._args: Dict[str, tuple] = {}
         self.key = jax.random.PRNGKey(seed)
         self.log: List[tuple] = []
+        self._plan_truth: Optional[IPCTable] = None
 
     # ---- job admission: build, profile, register ---- #
     def submit(self, job: Job):
@@ -98,10 +106,35 @@ class SharedPodServer:
         self._exec[job.name] = jitted
         self.log.append(("submit", job.name, prof.pur, prof.mur, prof.rm))
 
+    # ---- engine-backed planning ---- #
+    def plan(self, engine: WorkloadEngine, *, rounds: int = 1500) -> dict:
+        """Simulated drain of the pending jobs as one engine replay lane:
+        predicts the fleet-style makespan and — because the lane shares the
+        engine's scheduler for this (spec, profiles, alphas) identity —
+        pre-warms every drain decision the dispatcher is about to make."""
+        order = [n for n, j in self.jobs.items() if j.num_slices > 0]
+        if not order:
+            return {"predicted_makespan_cycles": 0.0, "time_line": [],
+                    "n_coschedules": 0}
+        # one measurement table for the server's lifetime: entries are
+        # keyed by profile content, so repeated drains re-simulate nothing
+        if self._plan_truth is None:
+            self._plan_truth = IPCTable(self.spec.virtual(), rounds=rounds,
+                                        persist=False)
+        lane = LaneSpec("KERNELET", self.profiles, order, self.spec,
+                        self._plan_truth,
+                        alpha_p=0.2, alpha_m=0.2, cp_margin=0.0)
+        res = engine.run([lane])[0]
+        return {"predicted_makespan_cycles": float(res.total_cycles),
+                "time_line": res.time_line,
+                "n_coschedules": res.n_coschedules}
+
     # ---- scheduling + interleaved dispatch ---- #
-    def drain(self, *, max_rounds: int = 10000):
-        sched = KerneletScheduler(self.spec, self.profiles,
-                                  alpha_p=0.2, alpha_m=0.2, cp_margin=0.0)
+    def drain(self, *, max_rounds: int = 10000, plan_first: bool = True):
+        engine = WorkloadEngine()
+        sched = engine.scheduler_for(self.spec, self.profiles,
+                                     alpha_p=0.2, alpha_m=0.2, cp_margin=0.0)
+        plan = self.plan(engine) if plan_first else None
         t0 = time.time()
         executed = []
         while any(j.num_slices > 0 for j in self.jobs.values()):
@@ -135,7 +168,8 @@ class SharedPodServer:
                 raise RuntimeError("scheduler did not drain")
         wall = time.time() - t0
         return {"rounds": executed, "wall_s": wall,
-                "predicted_gain": self._predicted_gain(executed)}
+                "predicted_gain": self._predicted_gain(executed),
+                "plan": plan}
 
     def _predicted_gain(self, executed) -> float:
         """Aggregate modeled co-scheduling profit over executed rounds."""
@@ -158,6 +192,11 @@ def demo():
     for ev in server.log:
         print("submitted", ev[1], f"PUR={ev[2]:.2f} MUR={ev[3]:.2f} R_m={ev[4]:.2f}")
     res = server.drain()
+    if res["plan"]:
+        print(f"engine plan: predicted makespan "
+              f"{res['plan']['predicted_makespan_cycles']:.0f} cycles over "
+              f"{len(res['plan']['time_line'])} phases "
+              f"({res['plan']['n_coschedules']} co-scheduled)")
     for k1, k2, n1, n2, cp in res["rounds"]:
         print(f"co-schedule {k1} x {k2}: slices {n1}:{n2}  predicted CP={cp:+.3f}")
     print(f"drained in {res['wall_s']:.1f}s; "

@@ -1,0 +1,378 @@
+"""Lane-equivalence tier: the vectorized workload engine
+(``repro.core.engine``) against the scalar ``run_policy_reference`` oracle.
+
+The engine's contract is *bit-identity per lane*: batching lanes, sharing
+schedulers, persisting decisions, and sharding sweeps may only change
+wall-clock, never results. Every test here therefore compares with ``==``
+(or 1e-9 rel where Markov solves put BLAS last-bits behind a decision),
+over all four policies, mixed batches, sharded sweeps, and fleets.
+
+Also hosts the persistent-decision-cache and artifact-store GC tests (the
+engine is their primary consumer).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import markov
+from repro.core.engine import LaneSpec, WorkloadEngine, run_fleet, run_lanes
+from repro.core.ipc_cache import ArtifactStore, live_schemas
+from repro.core.profiles import C2050, KernelProfile
+from repro.core.queue import (_Pending, make_workload, run_policy,
+                              run_policy_reference)
+from repro.core.scheduler import (DECISION_SCHEMA, DECISION_STORE_SCHEMA,
+                                  KerneletScheduler, _decision_store_at)
+from repro.core.simulator import IPCTable, simulate_many, \
+    simulate_many_sharded
+
+GPU = C2050
+VG = GPU.virtual()
+POLICIES = ["BASE", "KERNELET", "OPT", "MC"]
+ROUNDS = 500
+
+
+def prof(name, rm, coal=1.0, dep=0.0, blocks=512, ipb=200.0, occ=1.0,
+         pur=0.5, mur=0.1):
+    return KernelProfile(name, rm=rm, coal=coal, insns_per_block=ipb,
+                         num_blocks=blocks, occupancy=occ, pur=pur,
+                         mur=mur, dep_ratio=dep)
+
+
+@pytest.fixture(scope="module")
+def profiles():
+    # two compute-ish, one memory-bound uncoalesced, one dependency-stalled:
+    # enough contrast that KERNELET/OPT actually co-schedule
+    return {
+        "CA": prof("CA", 0.05, pur=0.9, mur=0.02, blocks=60),
+        "CB": prof("CB", 0.08, dep=0.15, pur=0.6, mur=0.05, blocks=40,
+                   ipb=150.0),
+        "MA": prof("MA", 0.4, coal=0.3, pur=0.1, mur=0.25, blocks=80,
+                   ipb=300.0),
+        "MB": prof("MB", 0.3, pur=0.2, mur=0.2, blocks=50, ipb=250.0),
+    }
+
+
+@pytest.fixture()
+def no_persist(monkeypatch):
+    """Equivalence runs with persistence off: results must come from the
+    computation, not from any store state a previous test left behind."""
+    monkeypatch.setenv("REPRO_IPC_CACHE", "0")
+
+
+@pytest.fixture()
+def truth():
+    return IPCTable(VG, rounds=ROUNDS, persist=False)
+
+
+def order_for(profiles, instances=4, seed=0):
+    return make_workload(profiles, sorted(profiles), instances=instances,
+                         seed=seed)
+
+
+def assert_lane_equal(got, want, policy):
+    assert got.total_cycles == want.total_cycles, policy
+    assert got.n_coschedules == want.n_coschedules, policy
+    assert got.n_slices == want.n_slices, policy
+    assert got.time_line == want.time_line, policy
+
+
+# ------------------------------------------------------------------ #
+# single-lane equivalence (run_policy is now an engine wrapper)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("policy", POLICIES)
+def test_single_lane_bit_identical(no_persist, profiles, truth, policy):
+    order = order_for(profiles)
+    ref = run_policy_reference(policy, profiles, order, GPU, truth, seed=3)
+    got = run_policy(policy, profiles, order, GPU, truth, seed=3)
+    assert_lane_equal(got, ref, policy)
+    assert got.time_line, "replay trace must not be empty"
+
+
+def test_mixed_batch_bit_identical(no_persist, profiles, truth):
+    """All four policies x three seeds interleaved in ONE engine batch:
+    each lane must still match its standalone scalar run exactly."""
+    specs = [LaneSpec(pol, profiles, order_for(profiles, seed=s), GPU,
+                      truth, seed=s)
+             for pol in POLICIES for s in (0, 1, 2)]
+    results = WorkloadEngine().run(specs)
+    assert len(results) == len(specs)
+    for spec, got in zip(specs, results):
+        ref = run_policy_reference(spec.policy, spec.profiles, spec.order,
+                                   spec.gpu, spec.truth, seed=spec.seed)
+        assert_lane_equal(got, ref, spec.policy)
+
+
+@pytest.mark.parametrize("workers", ["1", "2"])
+def test_batch_equivalence_with_sweep_workers(no_persist, profiles,
+                                              monkeypatch, workers):
+    """REPRO_SWEEP_WORKERS must never change lane results (sharding is a
+    wall-clock knob on the measurement sweeps the engine batches)."""
+    monkeypatch.setenv("REPRO_SWEEP_WORKERS", workers)
+    truth = IPCTable(VG, rounds=ROUNDS, persist=False)
+    order = order_for(profiles)
+    specs = [LaneSpec(pol, profiles, order, GPU, truth) for pol in POLICIES]
+    results = run_lanes(specs)
+    for spec, got in zip(specs, results):
+        ref = run_policy_reference(spec.policy, profiles, order, GPU,
+                                   IPCTable(VG, rounds=ROUNDS,
+                                            persist=False))
+        assert_lane_equal(got, ref, spec.policy)
+
+
+def test_sharded_makespan_batches_identical(profiles):
+    """simulate_many_sharded now covers makespan mode: any sharding of a
+    mixed steady/makespan batch returns the in-process values exactly."""
+    profs = list(profiles.values())
+    cfgs = [([p], [2]) for p in profs] + [([profs[0], profs[2]], [2, 2])]
+    blocks = [[12], [7], None, [9], [6, 8]]
+    ipb = [[40.0], [25.0], None, [30.0], [20.0, 35.0]]
+    single = simulate_many(cfgs, VG, seed=1, rounds=300, blocks=blocks,
+                           insns_per_block=ipb)
+    sharded = simulate_many_sharded(cfgs, VG, seed=1, rounds=300,
+                                    blocks=blocks, insns_per_block=ipb,
+                                    workers=2)
+    assert len(single) == len(sharded)
+    for s, t in zip(single, sharded):
+        assert s.cycles == t.cycles
+        assert s.ipcs == t.ipcs
+        assert s.instructions == t.instructions
+
+
+def test_sharded_makespan_length_mismatch_raises(profiles):
+    cfgs = [([profiles["CA"]], [1])]
+    with pytest.raises(ValueError):
+        simulate_many_sharded(cfgs, VG, blocks=[[1], [2]])
+
+
+# ------------------------------------------------------------------ #
+# fleets: one arrival stream over N GPUs sharing truth + decisions
+# ------------------------------------------------------------------ #
+def test_fleet_lanes_match_standalone(no_persist, profiles, truth):
+    order = order_for(profiles, instances=6)
+    fleet = run_fleet("OPT", profiles, order, GPU, truth, 3)
+    assert len(fleet.lanes) == 3
+    for g, lane in enumerate(fleet.lanes):
+        ref = run_policy_reference("OPT", profiles, order[g::3], GPU,
+                                   truth, seed=g)
+        assert_lane_equal(lane, ref, f"gpu{g}")
+    assert fleet.makespan == max(r.total_cycles for r in fleet.lanes)
+    assert fleet.total_cycles == pytest.approx(
+        sum(r.total_cycles for r in fleet.lanes))
+
+
+# Fleet golden pin (regenerate via this file's ``__main__`` helper after
+# an *intentional* behavioral change). OPT decisions come from the
+# simulator alone, so the pin is exact; KERNELET (cp_margin=0, so the
+# model actually co-schedules these profiles) holds at 1e-9 rel to absorb
+# last-bit BLAS variation in the Markov solves behind its decisions.
+FLEET_GOLDEN = {
+    "OPT":      (975817.7347013367, 5, 26.699766614979325),
+    "KERNELET": (1317850.2399409376, 8, 27.40439276485788),
+}
+
+
+@pytest.mark.parametrize("policy", sorted(FLEET_GOLDEN))
+def test_fleet_golden_pin(no_persist, profiles, policy):
+    truth = IPCTable(VG, rounds=ROUNDS, persist=False)
+    order = order_for(profiles, instances=6)
+    fleet = run_fleet(policy, profiles, order, GPU, truth, 2,
+                      cp_margin=0.0 if policy == "KERNELET" else None)
+    makespan, n_cos, n_slices = FLEET_GOLDEN[policy]
+    rel = 0 if policy == "OPT" else 1e-9
+    assert fleet.makespan == pytest.approx(makespan, rel=rel)
+    assert fleet.n_coschedules == n_cos
+    assert fleet.n_slices == pytest.approx(n_slices, rel=rel)
+    if policy == "KERNELET":
+        assert n_cos > 0, "pin must exercise model-driven co-scheduling"
+
+
+def test_fleet_rejects_empty(profiles, truth):
+    with pytest.raises(ValueError):
+        run_fleet("OPT", profiles, [], GPU, truth, 0)
+
+
+# ------------------------------------------------------------------ #
+# shared schedulers: one search serves every lane with the identity
+# ------------------------------------------------------------------ #
+def test_lanes_share_scheduler_searches(no_persist, profiles, truth,
+                                        monkeypatch):
+    searches = []
+    orig = KerneletScheduler._search
+
+    def spy(self, names):
+        searches.append(tuple(names))
+        return orig(self, names)
+
+    monkeypatch.setattr(KerneletScheduler, "_search", spy)
+    order = order_for(profiles)
+    specs = [LaneSpec("KERNELET", profiles, order, GPU, truth, seed=s)
+             for s in range(4)]
+    WorkloadEngine().run(specs)
+    n_shared = len(searches)
+    assert n_shared >= 1
+    searches.clear()
+    for s in range(4):
+        run_policy_reference("KERNELET", profiles, order, GPU, truth,
+                             seed=s)
+    # scalar sweep: every lane re-searches; engine: each active set once
+    assert len(searches) == 4 * n_shared
+    assert len(set(searches)) == n_shared
+
+
+# ------------------------------------------------------------------ #
+# persistent decision cache
+# ------------------------------------------------------------------ #
+def _fresh_decision_process():
+    markov._SOLVES.clear()
+    markov._store_at.cache_clear()
+    _decision_store_at.cache_clear()
+
+
+def test_decision_cache_cold_process_skips_search(profiles, tmp_path,
+                                                  monkeypatch):
+    monkeypatch.setenv("REPRO_IPC_CACHE", str(tmp_path))
+    _fresh_decision_process()
+    names = sorted(profiles)
+    first = KerneletScheduler(GPU, profiles).find_coschedule(names)
+    stored = [f for f in os.listdir(tmp_path) if f.startswith("decisions_")]
+    assert stored, "decision must be persisted"
+    # the file version folds in the physics schemas decisions derive from,
+    # so a Markov/simulator bump can never serve a stale decision
+    assert f"_v{DECISION_STORE_SCHEMA}.json" in stored[0]
+    assert DECISION_STORE_SCHEMA != DECISION_SCHEMA
+    _fresh_decision_process()            # cold process: only disk is warm
+    sched = KerneletScheduler(GPU, profiles)
+    monkeypatch.setattr(
+        KerneletScheduler, "_search",
+        lambda self, names: pytest.fail("cold process ran the search"))
+    warm = sched.find_coschedule(names)
+    assert (warm.k1, warm.k2, warm.w1, warm.w2, warm.s1, warm.s2) == \
+        (first.k1, first.k2, first.w1, first.w2, first.s1, first.s2)
+    assert warm.cp == first.cp
+    assert warm.cipc1 == first.cipc1 and warm.cipc2 == first.cipc2
+    _fresh_decision_process()
+
+
+def test_decision_cache_respects_toggle(profiles, tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_IPC_CACHE", str(tmp_path))
+    monkeypatch.setenv("REPRO_DECISION_CACHE", "0")
+    _fresh_decision_process()
+    sched = KerneletScheduler(GPU, profiles)
+    assert sched._decision_store() is None
+    sched.find_coschedule(sorted(profiles))
+    assert not [f for f in os.listdir(tmp_path)
+                if f.startswith("decisions_")]
+    _fresh_decision_process()
+
+
+def test_decision_cache_keyed_on_params_and_mode(profiles, tmp_path,
+                                                 monkeypatch):
+    """Different alphas or decision modes must never share an entry."""
+    monkeypatch.setenv("REPRO_IPC_CACHE", str(tmp_path))
+    _fresh_decision_process()
+    names = sorted(profiles)
+    a = KerneletScheduler(GPU, profiles, alpha_p=0.4)
+    b = KerneletScheduler(GPU, profiles, alpha_p=0.2)
+    assert a._decision_skey(names) != b._decision_skey(names)
+    truth = IPCTable(VG, rounds=ROUNDS, persist=False)
+    oracle = KerneletScheduler(GPU, profiles, decision_table=truth)
+    assert oracle._store_tag != a._store_tag
+    assert f"_s{truth.seed}_r{truth.rounds}" in oracle._store_tag
+    _fresh_decision_process()
+
+
+# ------------------------------------------------------------------ #
+# artifact-store GC
+# ------------------------------------------------------------------ #
+def test_gc_drops_dead_schema_files_only(tmp_path):
+    live = live_schemas()
+    keep = {
+        f"markov_aaaa_3s_v{live['markov']}.json",
+        f"ipc_v{live['ipc']}_bbbb_s0_r100.json",
+        f"decisions_cccc_model3s_v{live['decisions']}.json",
+        "unrelated_v0.json",             # unknown family: untouched
+        "notes.txt",
+    }
+    dead = {
+        f"markov_aaaa_3s_v{live['markov'] + 1}.json",
+        "ipc_v0_bbbb_s0_r100.json",
+        "decisions_cccc_model3s_v0.json",
+        f"calib_dddd_v{live['calib'] + 7}.json",
+    }
+    for f in keep | dead:
+        (tmp_path / f).write_text("{}")
+    removed = ArtifactStore.gc(dirname=str(tmp_path))
+    assert {os.path.basename(p) for p in removed} == dead
+    assert set(os.listdir(tmp_path)) == keep
+
+
+def test_gc_missing_dir_and_disabled(tmp_path, monkeypatch):
+    assert ArtifactStore.gc(dirname=str(tmp_path / "nope")) == []
+    monkeypatch.setenv("REPRO_IPC_CACHE", "0")
+    assert ArtifactStore.gc() == []
+
+
+def test_live_schemas_cover_known_families():
+    assert set(live_schemas()) == {"ipc", "markov", "calib", "decisions"}
+
+
+# ------------------------------------------------------------------ #
+# run_policy event-log / _Pending regressions
+# ------------------------------------------------------------------ #
+def test_mc_replay_trace_not_empty(no_persist, profiles, truth):
+    """Regression: the MC branch never appended to time_line, so MC replay
+    traces were empty while every other policy logged."""
+    order = order_for(profiles)
+    for runner in (run_policy_reference, run_policy):
+        res = runner("MC", profiles, order, GPU, truth, seed=0)
+        assert res.time_line
+        assert all(ev.startswith(("mc:", "solo:"))
+                   for _, ev in res.time_line)
+        totals = [t for t, _ in res.time_line]
+        assert totals == sorted(totals)
+        assert totals[-1] == res.total_cycles
+
+
+def test_pending_retires_blocks_entries():
+    """Regression: retired kernels were popped from the queue order but
+    their zero entries stayed in ``blocks`` forever."""
+    profiles = {"A": prof("A", 0.1, blocks=4), "B": prof("B", 0.2, blocks=2)}
+    pend = _Pending(profiles, ["A", "B", "A"])
+    assert pend.blocks == {"A": 8.0, "B": 2.0}
+    pend.drain("B", 2.0)
+    assert "B" not in pend.blocks
+    assert pend.order == ["A"]
+    pend.drain("A", 100.0)
+    assert pend.blocks == {}
+    assert pend.active() == []
+
+
+def test_engine_stats_track_batches(no_persist, profiles, truth):
+    engine = WorkloadEngine()
+    order = order_for(profiles)
+    engine.run([LaneSpec(pol, profiles, order, GPU, truth)
+                for pol in POLICIES])
+    assert engine.stats["lanes"] == 4
+    assert engine.stats["steps"] >= 1
+    assert engine.stats["pair_lookups"] + engine.stats["solo_lookups"] > 0
+
+
+if __name__ == "__main__":       # fleet pin regeneration helper
+    os.environ["REPRO_IPC_CACHE"] = "0"
+    profs = {
+        "CA": prof("CA", 0.05, pur=0.9, mur=0.02, blocks=60),
+        "CB": prof("CB", 0.08, dep=0.15, pur=0.6, mur=0.05, blocks=40,
+                   ipb=150.0),
+        "MA": prof("MA", 0.4, coal=0.3, pur=0.1, mur=0.25, blocks=80,
+                   ipb=300.0),
+        "MB": prof("MB", 0.3, pur=0.2, mur=0.2, blocks=50, ipb=250.0),
+    }
+    order = make_workload(profs, sorted(profs), instances=6, seed=0)
+    for pol in ("OPT", "KERNELET"):
+        fleet = run_fleet(pol, profs, order, GPU,
+                          IPCTable(VG, rounds=ROUNDS, persist=False), 2,
+                          cp_margin=0.0 if pol == "KERNELET" else None)
+        print(f'    "{pol}": ({fleet.makespan!r}, {fleet.n_coschedules},'
+              f' {fleet.n_slices!r}),')

@@ -42,15 +42,20 @@ def test_pending_conserves_blocks(order, drains):
     names = list(pend.blocks)
     for i, d in enumerate(drains):
         n = names[i % len(names)]
-        before = pend.blocks[n]
+        before = pend.blocks.get(n, 0.0)
+        if before <= 0.0:
+            continue                             # retired: fully drained
         pend.drain(n, d)
-        drained += before - pend.blocks[n]       # actual removal, clamped
-        assert pend.blocks[n] >= 0.0
+        after = pend.blocks.get(n, 0.0)          # retired entries vanish
+        drained += before - after                # actual removal, clamped
+        assert after >= 0.0
     assert sum(pend.blocks.values()) + drained == pytest.approx(initial)
-    # drained kernels leave the queue, never to reappear
+    # drained kernels leave the queue AND the block ledger, never to
+    # reappear (retired entries used to linger as stale zeros)
     for n in names:
-        if pend.blocks[n] <= 0:
+        if pend.blocks.get(n, 0.0) <= 0:
             assert n not in pend.order
+            assert n not in pend.blocks
 
 
 # ------------------------------------------------------------------ #
