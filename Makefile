@@ -20,6 +20,7 @@ bench:
 bench-smoke:
 	$(PYTHON) -m benchmarks.decision_latency --smoke
 	$(PYTHON) -m benchmarks.replay_throughput --smoke
+	$(PYTHON) -m benchmarks.arrival_latency --smoke
 
 # drop artifact-store files written under dead schema versions
 gc-cache:

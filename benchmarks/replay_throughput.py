@@ -69,7 +69,7 @@ def _fresh_process_state() -> None:
     _decision_store_at.cache_clear()
 
 
-def _lane_args(lanes: int, instances: int):
+def _lane_args(lanes: int):
     """(policy, order-seed) grid: policies cycle fastest, so any prefix of
     the grid is a mixed-policy batch."""
     out = []
@@ -97,7 +97,7 @@ def bench(lanes: int = 16, instances: int = 40, rounds: int = 2500) -> dict:
             IPCTable(vg, rounds=rounds).prefill(profs)
             markov.MarkovModel(vg).flush()
             orders = {}
-            for _, oseed, _ in _lane_args(lanes, instances):
+            for _, oseed, _ in _lane_args(lanes):
                 if oseed not in orders:
                     orders[oseed] = make_workload(
                         profs, NAMES, instances=instances, seed=oseed)
@@ -108,12 +108,12 @@ def bench(lanes: int = 16, instances: int = 40, rounds: int = 2500) -> dict:
                 return [LaneSpec(policy, profs, orders[oseed], gpu, truth,
                                  seed=lseed)
                         for policy, oseed, lseed in
-                        _lane_args(lanes, instances)]
+                        _lane_args(lanes)]
 
             # ---- baseline: one cold scalar process per configuration ----
             os.environ["REPRO_DECISION_CACHE"] = "0"
             base_results, t_base = [], 0.0
-            for policy, oseed, lseed in _lane_args(lanes, instances):
+            for policy, oseed, lseed in _lane_args(lanes):
                 _fresh_process_state()
                 t0 = time.perf_counter()
                 p = calibrated_benchmarks(gpu)      # every process profiles

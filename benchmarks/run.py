@@ -29,13 +29,14 @@ def main() -> None:
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks.paper_figs import ALL_FIGS
-    from benchmarks import decision_latency, replay_throughput, \
-        tpu_coschedule
+    from benchmarks import arrival_latency, decision_latency, \
+        replay_throughput, tpu_coschedule
 
     benches = dict(ALL_FIGS)
     benches["tpu_coschedule"] = tpu_coschedule.bench
     benches["decision_latency"] = decision_latency.bench
     benches["replay_throughput"] = replay_throughput.bench
+    benches["arrival_latency"] = arrival_latency.bench
     if args.only:
         benches = {k: v for k, v in benches.items() if k == args.only}
 
@@ -50,6 +51,8 @@ def main() -> None:
             rec = fn(rounds=2000)
         elif args.fast and name == "replay_throughput":
             rec = fn(lanes=8, instances=10, rounds=600)
+        elif args.fast and name == "arrival_latency":
+            rec = fn(instances=4, rounds=500)
         else:
             rec = fn()
         dt = time.time() - t0
@@ -61,6 +64,8 @@ def main() -> None:
                 decision_latency.record_history(rec)
             elif name == "replay_throughput":
                 replay_throughput.record_history(rec)
+            elif name == "arrival_latency":
+                arrival_latency.record_history(rec)
         print(f"{name},{dt * 1e6:.0f},{_headline_str(rec)}")
 
 

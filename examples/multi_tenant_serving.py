@@ -6,8 +6,10 @@ The drain runs on the workload engine (``repro.core.engine``): a simulated
 replay lane first predicts the makespan and warms the shared decision
 cache, then the dispatcher executes with every decision a cache hit.
 
-  PYTHONPATH=src python examples/multi_tenant_serving.py              # real dispatch (compiles with jax)
-  PYTHONPATH=src python examples/multi_tenant_serving.py --fleet 4    # pure-simulation multi-pod replay (no jax)
+  PYTHONPATH=src python examples/multi_tenant_serving.py                  # real dispatch (compiles with jax)
+  PYTHONPATH=src python examples/multi_tenant_serving.py --fleet 4        # pure-simulation multi-pod replay (no jax)
+  PYTHONPATH=src python examples/multi_tenant_serving.py --arrivals 1e-5  # arrival-timed replay: Poisson job
+                                                                          # arrivals, queue-wait/SLO metrics (no jax)
 """
 import argparse
 import dataclasses
@@ -15,16 +17,22 @@ import sys
 import time
 
 
-def fleet_replay(n_pods: int) -> None:
+def fleet_replay(n_pods: int, arrival_rate: float = 0.0) -> None:
     """Replay the demo tenant mix over a simulated fleet of shared pods —
     one engine batch, one measurement service, one decision cache. Builds
     the tenant profiles analytically (compiled cost analysis is not needed
-    for the replay), so this path never imports jax."""
+    for the replay), so this path never imports jax.
+
+    With ``arrival_rate`` > 0 the replay is arrival-timed: tenant jobs
+    land on a Poisson stream at that rate (events per simulated cycle)
+    instead of forming a known backlog, and the fleet result reports
+    per-job queue wait and SLO attainment alongside the makespan."""
     from repro.configs import SHAPES, get_config
     from repro.core.costs import cell_cost
     from repro.core.engine import WorkloadEngine, run_fleet
     from repro.core.profiles import TPU_V5E, tpu_profile_from_costs
     from repro.core.simulator import IPCTable
+    from repro.data.synthetic import poisson_arrivals
 
     tenants = [  # (name, arch, phase, slices) — the demo() mix
         ("tenantA-phi3-prefill", "phi3-mini-3.8b", "prefill", 24),
@@ -43,19 +51,37 @@ def fleet_replay(n_pods: int) -> None:
             prof, insns_per_block=1000.0, num_blocks=slices)
     truth = IPCTable(TPU_V5E.virtual(), rounds=1500, persist=False)
     order = [name for name, *_ in tenants]
+    arrivals = None
+    slo = None
+    if arrival_rate > 0:
+        arrivals = list(poisson_arrivals(arrival_rate, len(order), seed=0))
+        slo = 2.0 / arrival_rate          # two mean interarrival gaps
     engine = WorkloadEngine()
     t0 = time.perf_counter()
     fleet = run_fleet("KERNELET", profiles, order, TPU_V5E, truth, n_pods,
-                      alpha_p=0.2, alpha_m=0.2, engine=engine)
+                      alpha_p=0.2, alpha_m=0.2, engine=engine,
+                      arrivals=arrivals, slo_deadline=slo)
     dt = time.perf_counter() - t0
     print(f"fleet of {n_pods} pods: makespan {fleet.makespan:.0f} cycles, "
           f"{fleet.n_coschedules} co-schedules, replay took {dt * 1e3:.1f}ms")
     for g, lane in enumerate(fleet.lanes):
         events = ", ".join(ev for _, ev in lane.time_line)
         print(f"  pod{g}: {lane.total_cycles:.0f} cycles  [{events}]")
+    if fleet.latency is not None:
+        lat = fleet.latency
+        print(f"arrival-timed (rate={arrival_rate:g}/cycle): "
+              f"wait p50 {lat['wait_p50']:.0f} / p95 {lat['wait_p95']:.0f} "
+              f"cycles; SLO({lat['slo_deadline']:.0f}) attainment "
+              f"{lat['slo_attainment']:.0%}")
+        for name, arr, comp in sorted(
+                (c for lane in fleet.lanes for c in lane.completions),
+                key=lambda c: c[2]):
+            print(f"  {name}: arrived {arr:.0f}, done {comp:.0f} "
+                  f"(wait {comp - arr:.0f})")
     print(f"engine: {engine.stats['steps']} steps, "
           f"{engine.stats['pair_lookups']} pair + "
-          f"{engine.stats['solo_lookups']} solo lookups batched")
+          f"{engine.stats['solo_lookups']} solo lookups batched, "
+          f"{engine.stats['idle_ffwd']} idle fast-forwards")
 
 
 if __name__ == "__main__":
@@ -63,9 +89,13 @@ if __name__ == "__main__":
     ap.add_argument("--fleet", type=int, default=0, metavar="N_PODS",
                     help="simulated multi-pod fleet replay instead of "
                          "real dispatch")
+    ap.add_argument("--arrivals", type=float, default=0.0, metavar="RATE",
+                    help="arrival-timed replay: tenant jobs land on a "
+                         "Poisson stream at RATE events per simulated "
+                         "cycle (implies --fleet 1 unless given)")
     args = ap.parse_args()
-    if args.fleet:
-        fleet_replay(args.fleet)
+    if args.fleet or args.arrivals:
+        fleet_replay(max(args.fleet, 1), arrival_rate=args.arrivals)
         sys.exit(0)
     from repro.launch.serve import demo
     demo()

@@ -25,6 +25,13 @@ engine that advances many independent replay *lanes* at once:
   * **Fleets.** ``run_fleet`` splits one arrival stream across N GPUs that
     share one measurement service and one decision cache — the multi-GPU /
     multi-tenant serving shape (see ``repro.launch.serve``).
+  * **Online arrivals.** A ``LaneSpec.arrivals`` schedule makes the lane
+    arrival-timed: kernels are admitted when the lane clock passes their
+    timestamp, running phases are truncated at the next arrival (so the
+    decision re-fires on the newly landed kernel), idle lanes fast-forward
+    to their next arrival, and per-instance completion records feed
+    latency/SLO metrics (``WorkloadResult.latency_metrics``). The all-zeros
+    schedule is pinned bit-identical to backlog mode by tests.
 
 The phase arithmetic is element-for-element the same IEEE-754 sequence as
 the scalar ``_coexec_phase``/``_solo_phase`` helpers, so batching changes
@@ -45,7 +52,16 @@ from repro.core.simulator import IPCTable
 
 @dataclasses.dataclass
 class LaneSpec:
-    """One replay configuration: everything ``run_policy`` takes."""
+    """One replay configuration: everything ``run_policy`` takes.
+
+    ``arrivals`` (one timestamp per ``order`` entry) switches the lane to
+    arrival-timed replay: kernels are admitted when the lane clock passes
+    their arrival, running phases are truncated at the next arrival so
+    decisions re-fire on newly landed work, idle lanes fast-forward to the
+    next arrival, and per-instance completion records are collected for
+    latency/SLO metrics. ``None`` (default) is the paper's backlog mode —
+    and an arrival schedule that is all zeros is pinned bit-identical to
+    it (totals and event log) by tests."""
     policy: str
     profiles: Dict[str, KernelProfile]
     order: List[str]
@@ -57,25 +73,41 @@ class LaneSpec:
     mc_rng: Optional[object] = None
     cp_margin: Optional[float] = None
     label: Optional[str] = None
+    arrivals: Optional[Sequence[float]] = None
+    slo_deadline: Optional[float] = None
 
 
 @dataclasses.dataclass
 class FleetResult:
     """A homogeneous multi-GPU replay: per-GPU lane results plus the fleet
-    aggregates (makespan = slowest GPU, the workload-throughput metric)."""
+    aggregates (makespan = slowest GPU, the workload-throughput metric).
+    Arrival-timed fleets also carry the pooled latency metrics."""
     lanes: List[WorkloadResult]
     makespan: float
     total_cycles: float
     n_coschedules: int
     n_slices: float
+    latency: Optional[dict] = None
+
+
+def aggregate_latency(results: Sequence[WorkloadResult],
+                      slo_deadline: Optional[float] = None) -> dict:
+    """Pool every lane's per-instance completion records into one latency
+    summary (same fields as ``WorkloadResult.latency_metrics``)."""
+    pooled = WorkloadResult("", 0.0, 0, 0.0, [],
+                            completions=[c for r in results
+                                         for c in r.completions])
+    return pooled.latency_metrics(slo_deadline)
 
 
 class _Lane:
-    """Mutable replay state of one lane (mirrors the scalar loop's locals)."""
+    """Mutable replay state of one lane (mirrors the scalar loop's locals).
+    ``total`` doubles as the lane clock in arrival-timed mode (it only ever
+    moves forward, by charged phases or idle fast-forwards)."""
 
     def __init__(self, spec: LaneSpec, sched: Optional[KerneletScheduler]):
         self.spec = spec
-        self.pend = _Pending(spec.profiles, spec.order)
+        self.pend = _Pending(spec.profiles, spec.order, spec.arrivals)
         self.sched = sched
         self.total = 0.0
         self.n_cos = 0
@@ -87,9 +119,13 @@ class _Lane:
                      else np.random.default_rng(spec.seed))
                     if spec.policy == "MC" else None)
 
+    def live(self) -> bool:
+        return bool(self.pend.active()) or self.pend.has_pending()
+
     def result(self) -> WorkloadResult:
         return WorkloadResult(self.spec.policy, self.total, self.n_cos,
-                              self.n_slices, self.log)
+                              self.n_slices, self.log,
+                              completions=self.pend.completions)
 
 
 # one decision per lane per step; co-exec and solo phases are charged in
@@ -111,6 +147,10 @@ class _Action:
     b1: float = 0.0
     b2: float = 0.0
     solo_w: Optional[int] = None    # solo: explicit units (None = default)
+    # time budget until this lane's next arrival (inf = none): the charge
+    # pass truncates the phase here so the decision re-fires on the newly
+    # landed kernel. inf leaves the backlog arithmetic bit-identical.
+    cap: float = np.inf
 
 
 class WorkloadEngine:
@@ -120,7 +160,8 @@ class WorkloadEngine:
         self._schedulers: Dict = {}
         # step/batch counters for benchmarks and docs (not part of results)
         self.stats = {"steps": 0, "lanes": 0, "pair_lookups": 0,
-                      "solo_lookups": 0, "decisions": 0}
+                      "solo_lookups": 0, "decisions": 0,
+                      "admitted": 0, "idle_ffwd": 0}
 
     # ---- shared decision state ---- #
     def scheduler_for(self, gpu: GPUSpec,
@@ -239,7 +280,9 @@ class WorkloadEngine:
     @staticmethod
     def _charge_co(actions: List[_Action]):
         """All lanes' co-exec phases at once: element-for-element the same
-        float64 sequence as the scalar ``_coexec_phase``."""
+        float64 sequence as the scalar ``_coexec_phase``. A finite ``cap``
+        (arrival-timed lanes) truncates the drain time at the lane's next
+        arrival; ``inf`` caps reproduce the scalar values bit-for-bit."""
         get = np.asarray
         b1 = get([a.b1 for a in actions], dtype=np.float64)
         b2 = get([a.b2 for a in actions], dtype=np.float64)
@@ -254,11 +297,12 @@ class WorkloadEngine:
         n_sm = get([a.lane.spec.gpu.n_sm for a in actions], dtype=np.float64)
         lo = get([a.lane.spec.gpu.launch_overhead for a in actions],
                  dtype=np.float64)
+        cap = get([a.cap for a in actions], dtype=np.float64)
         thr1 = c1 * n_sm / i1
         thr2 = c2 * n_sm / i2
         t1 = b1 / np.maximum(thr1, 1e-12)
         t2 = b2 / np.maximum(thr2, 1e-12)
-        t = np.minimum(t1, t2)
+        t = np.minimum(np.minimum(t1, t2), cap)
         d1 = np.minimum(b1, thr1 * t)
         d2 = np.minimum(b2, thr2 * t)
         sl = d1 / np.maximum(s1, 1) + d2 / np.maximum(s2, 1)
@@ -267,7 +311,11 @@ class WorkloadEngine:
     @staticmethod
     def _charge_solo(actions: List[_Action]):
         """All lanes' solo phases at once (``_solo_phase`` semantics;
-        slice size 0 means unsliced — one launch charge)."""
+        slice size 0 means unsliced — one launch charge). A finite ``cap``
+        truncates the phase at the next arrival and drains only the blocks
+        processed by then; the uncapped branch drains the exact ``b``
+        (never a round-tripped ``thr * t``), keeping backlog lanes
+        bit-identical to the scalar reference."""
         get = np.asarray
         b = get([a.b1 for a in actions], dtype=np.float64)
         ins = get([a.p1.insns_per_block for a in actions], dtype=np.float64)
@@ -278,21 +326,46 @@ class WorkloadEngine:
         n_sm = get([a.lane.spec.gpu.n_sm for a in actions], dtype=np.float64)
         lo = get([a.lane.spec.gpu.launch_overhead for a in actions],
                  dtype=np.float64)
-        t = b * ins / np.maximum(ipcs * n_sm, 1e-12)
-        n_sl = np.where(ss > 0, b / np.maximum(ss, 1), 1.0)
-        return t + n_sl * lo, n_sl
+        cap = get([a.cap for a in actions], dtype=np.float64)
+        t_full = b * ins / np.maximum(ipcs * n_sm, 1e-12)
+        t = np.minimum(t_full, cap)
+        truncated = t < t_full
+        thr = np.maximum(ipcs * n_sm, 1e-12) / ins
+        d = np.where(truncated, np.minimum(b, thr * t), b)
+        n_sl = np.where(ss > 0, d / np.maximum(ss, 1), 1.0)
+        return t + n_sl * lo, n_sl, d
 
     # ---- main loop ---- #
     def run(self, specs: Sequence[LaneSpec]) -> List[WorkloadResult]:
         """Drain every lane; returns one ``WorkloadResult`` per spec, in
         order — each bit-identical to ``run_policy_reference`` on the same
-        configuration."""
+        configuration (arrival-timed lanes: on the t=0 schedule).
+
+        Arrival handling is batched across lanes within the normal step
+        loop: each step first admits everything that has landed by each
+        lane's clock (fast-forwarding idle lanes to their next arrival),
+        then decides/charges as usual with per-lane phase caps at the next
+        arrival, then resolves per-instance completions."""
         lanes = [_Lane(s, self._lane_scheduler(s)) for s in specs]
         self.stats["lanes"] += len(lanes)
-        active = [ln for ln in lanes if ln.pend.active()]
+        active = [ln for ln in lanes if ln.live()]
         while active:
             self.stats["steps"] += 1
+            # -- arrival events: admission + idle fast-forward -- #
+            for ln in active:
+                self.stats["admitted"] += ln.pend.admit_until(ln.total)
+                if not ln.pend.active():
+                    # idle until the next arrival: advance the lane clock
+                    nxt = ln.pend.next_arrival()
+                    ln.total = max(ln.total, nxt)
+                    ln.log.append((ln.total, "idle"))
+                    self.stats["idle_ffwd"] += 1
+                    self.stats["admitted"] += ln.pend.admit_until(ln.total)
             actions = [self._decide(ln) for ln in active]
+            for a in actions:
+                nxt = a.lane.pend.next_arrival()
+                if nxt is not None:
+                    a.cap = nxt - a.lane.total    # > 0: nxt was unadmitted
             self._resolve_lookups(actions)
             co = [a for a in actions if a.kind == "co"]
             solo = [a for a in actions if a.kind == "solo"]
@@ -307,16 +380,18 @@ class WorkloadEngine:
                         ln.n_cos += 1
                         ln.n_slices = ln.n_slices + sl[j]
                     ln.log.append((ln.total, a.event))
+                    ln.pend.pop_completed(ln.total)
             if solo:
-                t, n_sl = self._charge_solo(solo)
+                t, n_sl, d = self._charge_solo(solo)
                 for j, a in enumerate(solo):
                     ln = a.lane
-                    ln.pend.drain(a.n1, a.b1)
+                    ln.pend.drain(a.n1, d[j])
                     ln.total = ln.total + t[j]
                     if a.count:
                         ln.n_slices = ln.n_slices + n_sl[j]
                     ln.log.append((ln.total, a.event))
-            active = [ln for ln in active if ln.pend.active()]
+                    ln.pend.pop_completed(ln.total)
+            active = [ln for ln in active if ln.live()]
         return [ln.result() for ln in lanes]
 
 
@@ -329,20 +404,32 @@ def run_fleet(policy: str, profiles: Dict[str, KernelProfile],
               order: List[str], gpu: GPUSpec, truth: IPCTable,
               n_gpus: int, *, alpha_p: float = 0.4, alpha_m: float = 0.1,
               cp_margin: Optional[float] = None, seed: int = 0,
-              engine: Optional[WorkloadEngine] = None) -> FleetResult:
+              engine: Optional[WorkloadEngine] = None,
+              arrivals: Optional[Sequence[float]] = None,
+              slo_deadline: Optional[float] = None) -> FleetResult:
     """Replay one arrival stream over a homogeneous fleet of ``n_gpus``
     GPUs: arrivals are dealt round-robin (GPU g takes ``order[g::n_gpus]``,
     the arrival-order analogue of least-loaded dispatch under the paper's
     equal-rate Poisson mixes), every lane shares ``truth`` (one measurement
     service) and, via the engine, one scheduler decision cache. The fleet
-    makespan — the slowest GPU's total — is the workload metric."""
+    makespan — the slowest GPU's total — is the workload metric.
+
+    With ``arrivals`` (timestamps parallel to ``order``, dealt with it)
+    every lane replays arrival-timed, and the result additionally carries
+    the pooled latency metrics (p50/p95 wait, and SLO attainment when
+    ``slo_deadline`` is given)."""
     if n_gpus < 1:
         raise ValueError("n_gpus must be >= 1")
+    if arrivals is not None and len(arrivals) != len(order):
+        raise ValueError("arrivals must parallel order")
     eng = engine if engine is not None else WorkloadEngine()
     specs = [LaneSpec(policy=policy, profiles=profiles,
                       order=list(order[g::n_gpus]), gpu=gpu, truth=truth,
                       alpha_p=alpha_p, alpha_m=alpha_m,
-                      cp_margin=cp_margin, seed=seed + g, label=f"gpu{g}")
+                      cp_margin=cp_margin, seed=seed + g, label=f"gpu{g}",
+                      arrivals=(None if arrivals is None
+                                else list(arrivals[g::n_gpus])),
+                      slo_deadline=slo_deadline)
              for g in range(n_gpus)]
     results = eng.run(specs)
     return FleetResult(
@@ -350,4 +437,6 @@ def run_fleet(policy: str, profiles: Dict[str, KernelProfile],
         makespan=float(max(r.total_cycles for r in results)),
         total_cycles=float(sum(r.total_cycles for r in results)),
         n_coschedules=sum(r.n_coschedules for r in results),
-        n_slices=float(sum(r.n_slices for r in results)))
+        n_slices=float(sum(r.n_slices for r in results)),
+        latency=(aggregate_latency(results, slo_deadline)
+                 if arrivals is not None else None))

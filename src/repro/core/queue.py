@@ -16,8 +16,9 @@ survivor drains solo, and every slice launch pays the launch overhead.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -33,6 +34,33 @@ class WorkloadResult:
     n_coschedules: int
     n_slices: float
     time_line: list          # (cycles, event) log
+    # arrival-timed lanes only: one (name, arrival, completion) record per
+    # admitted kernel instance, in completion order (backlog lanes: empty)
+    completions: list = dataclasses.field(default_factory=list)
+
+    def latency_metrics(self, slo_deadline: Optional[float] = None) -> dict:
+        """Derived latency metrics over the per-instance completion records
+        (arrival-timed lanes). Wait is the sojourn time — completion minus
+        arrival — so it includes both queueing and service; completions are
+        resolved at phase-end granularity (the event-log resolution).
+        ``slo_attainment`` is the fraction of instances whose wait is
+        within ``slo_deadline`` cycles."""
+        waits = np.asarray([c - a for _, a, c in self.completions],
+                           dtype=np.float64)
+        if waits.size == 0:
+            out = {"n_completed": 0, "wait_p50": 0.0, "wait_p95": 0.0,
+                   "wait_mean": 0.0, "wait_max": 0.0}
+        else:
+            out = {"n_completed": int(waits.size),
+                   "wait_p50": float(np.percentile(waits, 50)),
+                   "wait_p95": float(np.percentile(waits, 95)),
+                   "wait_mean": float(waits.mean()),
+                   "wait_max": float(waits.max())}
+        if slo_deadline is not None:
+            out["slo_deadline"] = float(slo_deadline)
+            out["slo_attainment"] = (
+                float(np.mean(waits <= slo_deadline)) if waits.size else 1.0)
+        return out
 
 
 def make_workload(profiles: Dict[str, KernelProfile], names: List[str],
@@ -54,15 +82,38 @@ def make_workload(profiles: Dict[str, KernelProfile], names: List[str],
 class _Pending:
     """Aggregated remaining blocks per kernel type. The queue order lives in
     an insertion-ordered dict so retiring a drained kernel is O(1) instead
-    of an O(n) list scan per drain call."""
+    of an O(n) list scan per drain call.
 
-    def __init__(self, profiles, order):
+    With ``arrivals`` (one timestamp per ``order`` entry) the queue is
+    time-gated: instances are held back until ``admit_until(now)`` passes
+    their arrival, and per-instance completion times are recorded so
+    arrival-timed replays can derive queue-wait / SLO metrics. Admission
+    order is arrival order (stable for ties), so a schedule with every
+    arrival at t=0 builds the exact ledger the backlog constructor builds.
+    """
+
+    def __init__(self, profiles, order,
+                 arrivals: Optional[Sequence[float]] = None):
         self.profiles = profiles
         self.blocks = {}
         self._order = {}                     # queue order with dedup
-        for n in order:
-            self.blocks[n] = self.blocks.get(n, 0.0) + profiles[n].num_blocks
-            self._order.setdefault(n, None)
+        self._queue = collections.deque()    # unadmitted (arrival, name)
+        self._timed = arrivals is not None
+        self.completions: list = []          # (name, arrival, completion)
+        if not self._timed:
+            for n in order:
+                self.blocks[n] = (self.blocks.get(n, 0.0)
+                                  + profiles[n].num_blocks)
+                self._order.setdefault(n, None)
+            return
+        if len(arrivals) != len(order):
+            raise ValueError("arrivals must parallel order: "
+                             f"{len(arrivals)} != {len(order)}")
+        self._admitted = {}                  # name -> cum admitted blocks
+        self._drained = {}                   # name -> cum drained blocks
+        self._instances = {}                 # name -> deque[(arr, cum)]
+        events = sorted(zip(arrivals, range(len(order))))  # stable on ties
+        self._queue.extend((float(t), order[i]) for t, i in events)
 
     @property
     def order(self):
@@ -71,17 +122,66 @@ class _Pending:
     def active(self):
         return [n for n in self._order if self.blocks.get(n, 0) > 0]
 
+    # ---- time-gated admission (arrival-timed mode) ---- #
+    def has_pending(self) -> bool:
+        return bool(self._queue)
+
+    def next_arrival(self) -> Optional[float]:
+        return self._queue[0][0] if self._queue else None
+
+    def admit_until(self, now: float) -> int:
+        """Admit every instance with arrival <= ``now`` (arrival order);
+        returns the number admitted. No-op for backlog queues."""
+        n_adm = 0
+        q = self._queue
+        while q and q[0][0] <= now:
+            t, n = q.popleft()
+            nb = self.profiles[n].num_blocks
+            self.blocks[n] = self.blocks.get(n, 0.0) + nb
+            self._order.setdefault(n, None)
+            cum = self._admitted.get(n, 0.0) + nb
+            self._admitted[n] = cum
+            self._instances.setdefault(
+                n, collections.deque()).append((t, cum))
+            n_adm += 1
+        return n_adm
+
+    def pop_completed(self, now: float) -> list:
+        """Record (and return) instances fully drained by ``now``: instance
+        j of a kernel completes when its cumulative drained blocks reach
+        the cumulative admitted blocks through instance j (FIFO within a
+        name). The 1e-9 relative slack only absorbs float accumulation on
+        partial drains; full retirement snaps the ledger exactly."""
+        if not self._timed or not self._instances:
+            return []
+        done = []
+        for n in list(self._instances):
+            q = self._instances[n]
+            drained = self._drained.get(n, 0.0)
+            while q and drained + 1e-9 * max(1.0, q[0][1]) >= q[0][1]:
+                arr, _ = q.popleft()
+                done.append((n, arr, now))
+            if not q:
+                del self._instances[n]
+        self.completions.extend(done)
+        return done
+
     def drain(self, name, blocks):
         cur = self.blocks.get(name)
         if cur is None:
             return                           # already retired: idempotent
         left = max(0.0, cur - blocks)
+        if self._timed:
+            self._drained[name] = self._drained.get(name, 0.0) + (cur - left)
         if left <= 0:
             # retire fully: a drained kernel leaves the queue *and* the
             # block ledger (stale zero entries used to accumulate forever,
             # which at fleet scale is an unbounded dict per lane)
             self._order.pop(name, None)
             del self.blocks[name]
+            if self._timed:
+                # exact snap: everything admitted so far has drained
+                self._drained[name] = self._admitted.get(name, 0.0)
         else:
             self.blocks[name] = left
 
@@ -109,14 +209,23 @@ def _solo_phase(prof, blocks, ipc, gpu, slice_size=None):
 def run_policy(policy: str, profiles: Dict[str, KernelProfile],
                order: List[str], gpu: GPUSpec, truth: IPCTable,
                *, alpha_p: float = 0.4, alpha_m: float = 0.1,
-               seed: int = 0, mc_rng=None) -> WorkloadResult:
+               seed: int = 0, mc_rng=None,
+               arrivals: Optional[Sequence[float]] = None) -> WorkloadResult:
     """Drain one workload under one policy — a single-lane run of the
     vectorized workload engine (``repro.core.engine``), pinned bit-identical
-    to the scalar ``run_policy_reference`` implementation by tests."""
+    to the scalar ``run_policy_reference`` implementation by tests.
+
+    ``arrivals`` (one timestamp per ``order`` entry) switches the lane to
+    arrival-timed replay: instances are admitted at their arrival time,
+    running phases are truncated when new work lands, idle lanes
+    fast-forward to the next arrival, and the result carries per-instance
+    completion records (``WorkloadResult.completions`` /
+    ``latency_metrics``). A schedule with every arrival at t=0 is pinned
+    bit-identical (totals and event log) to the backlog mode."""
     from repro.core.engine import LaneSpec, WorkloadEngine
     spec = LaneSpec(policy=policy, profiles=profiles, order=order, gpu=gpu,
                     truth=truth, alpha_p=alpha_p, alpha_m=alpha_m,
-                    seed=seed, mc_rng=mc_rng)
+                    seed=seed, mc_rng=mc_rng, arrivals=arrivals)
     return WorkloadEngine().run([spec])[0]
 
 

@@ -4,16 +4,51 @@ Generates reproducible token streams (hash-seeded per shard/step) so that
 multi-host training is data-parallel-correct without any external dataset.
 The ``patches``/``audio`` entries are the modality-frontend stubs required
 by the assignment (precomputed patch/frame embeddings).
+
+Also hosts the synthetic *workload* generators for arrival-timed replays
+(``poisson_arrivals`` / ``make_timed_workload``): pure numpy, so the
+engine-side consumers (benchmarks, fleet replays) never import jax.
 """
 from __future__ import annotations
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 VLM_PATCHES = 256
+
+
+def poisson_arrivals(rate: float, n: int, seed: int = 0,
+                     start: float = 0.0) -> np.ndarray:
+    """``n`` arrival timestamps of a homogeneous Poisson process with
+    ``rate`` events per simulated cycle (i.i.d. exponential gaps of mean
+    1/rate, cumulatively summed from ``start``)."""
+    if rate <= 0:
+        raise ValueError("rate must be > 0")
+    if n < 0:
+        raise ValueError("n must be >= 0")
+    rng = np.random.default_rng(seed)
+    return start + np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def make_timed_workload(names, instances: int = 1000, lam: float = 1.0,
+                        seed: int = 0):
+    """Arrival-timed counterpart of ``repro.core.queue.make_workload``:
+    each application submits ``instances`` kernels on its own Poisson
+    stream at rate ``lam`` (paper §5.1, same RNG consumption order as
+    ``make_workload``), and the merged stream is returned as
+    ``(order, arrivals)`` — the two parallel lists an arrival-timed
+    ``LaneSpec`` takes. ``make_workload(... same args ...)`` returns
+    exactly this ``order``."""
+    rng = np.random.default_rng(seed)
+    events = []
+    for n in names:
+        t = 0.0
+        for _ in range(instances):
+            t += rng.exponential(1.0 / lam)
+            events.append((t, n))
+    events.sort()
+    return [n for _, n in events], [t for t, _ in events]
 
 
 def batch_keys(cfg) -> tuple:

@@ -1,0 +1,229 @@
+"""Arrival-timed replay tier: the engine's online-arrivals mode
+(``LaneSpec.arrivals``) against the backlog oracle and its own invariants.
+
+The load-bearing contract, pinned here for all four policies: a lane whose
+arrivals are all at t=0 is **bit-identical** (totals, counts, and event
+log) to the backlog mode — so the whole PR-3 equivalence tower
+(``run_policy_reference``, golden pins, fleet pins) keeps guarding the
+arrival-timed path. On top of that, hypothesis properties over random
+Poisson streams: work conservation (every arrived instance completes
+exactly once), monotone completion times, sojourn >= 0, and
+latency-metric sanity. Kept jax-free (pure numpy) like the engine.
+"""
+import numpy as np
+import pytest
+
+try:                                        # degrade gracefully without it:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                         # the == pins below still run
+    st = None
+
+from repro.core import markov
+from repro.core.engine import (LaneSpec, WorkloadEngine, aggregate_latency,
+                               run_fleet)
+from repro.core.profiles import C2050, KernelProfile
+from repro.core.queue import make_workload, run_policy, \
+    run_policy_reference
+from repro.core.scheduler import KerneletScheduler, _decision_store_at
+from repro.core.simulator import IPCTable
+from repro.data.synthetic import make_timed_workload, poisson_arrivals
+
+GPU = C2050
+VG = GPU.virtual()
+POLICIES = ["BASE", "KERNELET", "OPT", "MC"]
+ROUNDS = 500
+
+
+def prof(name, rm, coal=1.0, dep=0.0, blocks=512, ipb=200.0, occ=1.0,
+         pur=0.5, mur=0.1):
+    return KernelProfile(name, rm=rm, coal=coal, insns_per_block=ipb,
+                         num_blocks=blocks, occupancy=occ, pur=pur,
+                         mur=mur, dep_ratio=dep)
+
+
+@pytest.fixture(scope="module")
+def profiles():
+    return {
+        "CA": prof("CA", 0.05, pur=0.9, mur=0.02, blocks=60),
+        "CB": prof("CB", 0.08, dep=0.15, pur=0.6, mur=0.05, blocks=40,
+                   ipb=150.0),
+        "MA": prof("MA", 0.4, coal=0.3, pur=0.1, mur=0.25, blocks=80,
+                   ipb=300.0),
+        "MB": prof("MB", 0.3, pur=0.2, mur=0.2, blocks=50, ipb=250.0),
+    }
+
+
+@pytest.fixture()
+def no_persist(monkeypatch):
+    monkeypatch.setenv("REPRO_IPC_CACHE", "0")
+
+
+@pytest.fixture()
+def truth():
+    return IPCTable(VG, rounds=ROUNDS, persist=False)
+
+
+# ------------------------------------------------------------------ #
+# arrivals at t=0 == backlog mode, bit-identical, all four policies
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("policy", POLICIES)
+def test_arrivals_at_zero_bit_identical(no_persist, profiles, truth,
+                                        policy):
+    order = make_workload(profiles, sorted(profiles), instances=4, seed=0)
+    ref = run_policy_reference(policy, profiles, order, GPU, truth, seed=3)
+    got = run_policy(policy, profiles, order, GPU, truth, seed=3,
+                     arrivals=[0.0] * len(order))
+    assert got.total_cycles == ref.total_cycles, policy
+    assert got.n_coschedules == ref.n_coschedules, policy
+    assert got.n_slices == ref.n_slices, policy
+    assert got.time_line == ref.time_line, policy
+    # ...and the timed lane additionally resolves every instance
+    assert len(got.completions) == len(order)
+    assert all(a == 0.0 for _, a, _ in got.completions)
+
+
+def test_mixed_timed_and_backlog_lanes_one_batch(no_persist, profiles,
+                                                 truth):
+    """Backlog and arrival-timed lanes interleaved in ONE engine batch:
+    the backlog lanes must still match their standalone scalar runs."""
+    order = make_workload(profiles, sorted(profiles), instances=3, seed=1)
+    arr = list(poisson_arrivals(1e-5, len(order), seed=2))
+    specs = []
+    for pol in POLICIES:
+        specs.append(LaneSpec(pol, profiles, order, GPU, truth, seed=7))
+        specs.append(LaneSpec(pol, profiles, order, GPU, truth, seed=7,
+                              arrivals=arr))
+    results = WorkloadEngine().run(specs)
+    for spec, got in zip(specs, results):
+        if spec.arrivals is None:
+            ref = run_policy_reference(spec.policy, profiles, order, GPU,
+                                       truth, seed=spec.seed)
+            assert got.total_cycles == ref.total_cycles, spec.policy
+            assert got.time_line == ref.time_line, spec.policy
+        else:
+            assert len(got.completions) == len(order), spec.policy
+
+
+# ------------------------------------------------------------------ #
+# hypothesis: conservation + monotonicity over random Poisson streams
+# ------------------------------------------------------------------ #
+if st is not None:
+    @st.composite
+    def timed_workloads(draw):
+        nk = draw(st.integers(2, 3))
+        profiles = {}
+        for i in range(nk):
+            name = "K%d" % i
+            profiles[name] = prof(
+                name,
+                rm=draw(st.floats(0.005, 0.5)),
+                coal=draw(st.sampled_from([1.0, 0.3])),
+                blocks=draw(st.integers(20, 120)),
+                ipb=float(draw(st.integers(50, 400))),
+                pur=draw(st.floats(0.05, 1.0)),
+                mur=draw(st.floats(0.0, 0.3)),
+            )
+        instances = draw(st.integers(1, 4))
+        seed = draw(st.integers(0, 2 ** 16))
+        # arrival-time scale: from "everything lands almost at once" to
+        # "sparse stream with long idle gaps" relative to typical service
+        scale = draw(st.sampled_from([1e2, 1e5, 1e7]))
+        return profiles, instances, seed, scale
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    @given(wl=timed_workloads())
+    @settings(max_examples=8, deadline=None)
+    def test_every_arrival_completes_exactly_once(policy, wl):
+        profiles, instances, seed, scale = wl
+        truth = IPCTable(VG, rounds=400, persist=False)
+        order, raw = make_timed_workload(sorted(profiles),
+                                         instances=instances, seed=seed)
+        arrivals = [t * scale for t in raw]
+        res = run_policy(policy, profiles, order, GPU, truth, seed=seed,
+                         arrivals=arrivals)
+        # work conservation: one completion record per arrival, same
+        # multiset of kernel names
+        assert len(res.completions) == len(order)
+        assert sorted(n for n, _, _ in res.completions) == sorted(order)
+        # every instance completes at or after its arrival; the lane
+        # clock never runs backwards
+        assert all(c >= a for _, a, c in res.completions)
+        comps = [c for _, _, c in res.completions]
+        assert comps == sorted(comps)
+        assert res.total_cycles == pytest.approx(max(comps))
+        assert np.isfinite(res.total_cycles)
+
+    @given(wl=timed_workloads())
+    @settings(max_examples=6, deadline=None)
+    def test_latency_metrics_sane(wl):
+        profiles, instances, seed, scale = wl
+        truth = IPCTable(VG, rounds=400, persist=False)
+        order, raw = make_timed_workload(sorted(profiles),
+                                         instances=instances, seed=seed)
+        res = run_policy("KERNELET", profiles, order, GPU, truth,
+                         seed=seed, arrivals=[t * scale for t in raw])
+        m = res.latency_metrics(slo_deadline=1e12)
+        assert m["n_completed"] == len(order)
+        assert 0.0 <= m["wait_p50"] <= m["wait_p95"] <= m["wait_max"]
+        assert m["slo_attainment"] == 1.0    # infinite-ish deadline
+        tight = res.latency_metrics(slo_deadline=0.0)
+        assert tight["slo_attainment"] == 0.0  # waits strictly positive
+
+    @given(wl=timed_workloads())
+    @settings(max_examples=4, deadline=None)
+    def test_fleet_pools_latency(wl):
+        profiles, instances, seed, scale = wl
+        truth = IPCTable(VG, rounds=400, persist=False)
+        order, raw = make_timed_workload(sorted(profiles),
+                                         instances=instances, seed=seed)
+        arrivals = [t * scale for t in raw]
+        fleet = run_fleet("OPT", profiles, order, GPU, truth, 2,
+                          arrivals=arrivals, slo_deadline=1e15)
+        assert fleet.latency is not None
+        assert fleet.latency["n_completed"] == len(order)
+        assert fleet.latency == aggregate_latency(fleet.lanes, 1e15)
+
+
+# ------------------------------------------------------------------ #
+# determinism + cold-process decision-cache reuse under arrival mode
+# ------------------------------------------------------------------ #
+def test_timed_replay_deterministic(no_persist, profiles, truth):
+    order, raw = make_timed_workload(sorted(profiles), instances=3, seed=5)
+    arrivals = [t * 1e5 for t in raw]
+    a = run_policy("MC", profiles, order, GPU, truth, seed=1,
+                   arrivals=arrivals)
+    b = run_policy("MC", profiles, order, GPU, truth, seed=1,
+                   arrivals=arrivals)
+    assert a.total_cycles == b.total_cycles
+    assert a.time_line == b.time_line
+    assert a.completions == b.completions
+
+
+def _fresh_decision_process():
+    markov._SOLVES.clear()
+    markov._store_at.cache_clear()
+    _decision_store_at.cache_clear()
+
+
+def test_decision_cache_cold_process_reuse_arrival_mode(profiles, tmp_path,
+                                                        monkeypatch):
+    """Arrival-timed KERNELET lanes hit the persistent decision store like
+    backlog lanes do: a cold process replaying the same stream must
+    reproduce the run without a single candidate search."""
+    monkeypatch.setenv("REPRO_IPC_CACHE", str(tmp_path))
+    order, raw = make_timed_workload(sorted(profiles), instances=3, seed=9)
+    arrivals = [t * 1e5 for t in raw]
+    truth = IPCTable(VG, rounds=ROUNDS, persist=False)
+    _fresh_decision_process()
+    first = run_policy("KERNELET", profiles, order, GPU, truth,
+                       arrivals=arrivals)
+    _fresh_decision_process()            # cold process: only disk is warm
+    monkeypatch.setattr(
+        KerneletScheduler, "_search",
+        lambda self, names: pytest.fail("cold process ran the search"))
+    warm = run_policy("KERNELET", profiles, order, GPU, truth,
+                      arrivals=arrivals)
+    assert warm.total_cycles == first.total_cycles
+    assert warm.time_line == first.time_line
+    assert warm.completions == first.completions
+    _fresh_decision_process()

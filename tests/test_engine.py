@@ -172,6 +172,23 @@ FLEET_GOLDEN = {
     "KERNELET": (1317850.2399409376, 8, 27.40439276485788),
 }
 
+# policy -> per-GPU decision-event traces, pinned with ``==``: a BLAS that
+# drifts a Markov solve by a last bit moves the totals above within their
+# 1e-9 slack but cannot touch these; only a genuinely flipped decision
+# (different pair, split, or order) can.
+FLEET_GOLDEN_TRACE = {
+    "OPT": (
+        ("co:CB+MB@2:2", "co:CA+MB@2:2", "solo:CA", "solo:MA"),
+        ("co:CB+MB@2:2", "co:CA+MB@2:2", "co:MA+MB@1:3", "solo:MA"),
+    ),
+    "KERNELET": (
+        ("co:CB+MA@2:2", "co:CA+MA@2:2", "co:CA+MA@2:2", "co:MA+MB@2:2",
+         "solo:MA"),
+        ("co:CB+MA@2:2", "co:CA+MA@2:2", "co:CA+MA@2:2", "co:MA+MB@2:2",
+         "solo:MB"),
+    ),
+}
+
 
 @pytest.mark.parametrize("policy", sorted(FLEET_GOLDEN))
 def test_fleet_golden_pin(no_persist, profiles, policy):
@@ -184,6 +201,8 @@ def test_fleet_golden_pin(no_persist, profiles, policy):
     assert fleet.makespan == pytest.approx(makespan, rel=rel)
     assert fleet.n_coschedules == n_cos
     assert fleet.n_slices == pytest.approx(n_slices, rel=rel)
+    assert tuple(tuple(ev for _, ev in lane.time_line)
+                 for lane in fleet.lanes) == FLEET_GOLDEN_TRACE[policy]
     if policy == "KERNELET":
         assert n_cos > 0, "pin must exercise model-driven co-scheduling"
 
@@ -370,9 +389,19 @@ if __name__ == "__main__":       # fleet pin regeneration helper
         "MB": prof("MB", 0.3, pur=0.2, mur=0.2, blocks=50, ipb=250.0),
     }
     order = make_workload(profs, sorted(profs), instances=6, seed=0)
+    traces = {}
     for pol in ("OPT", "KERNELET"):
         fleet = run_fleet(pol, profs, order, GPU,
                           IPCTable(VG, rounds=ROUNDS, persist=False), 2,
                           cp_margin=0.0 if pol == "KERNELET" else None)
         print(f'    "{pol}": ({fleet.makespan!r}, {fleet.n_coschedules},'
               f' {fleet.n_slices!r}),')
+        traces[pol] = tuple(tuple(ev for _, ev in lane.time_line)
+                            for lane in fleet.lanes)
+    print("FLEET_GOLDEN_TRACE = {")
+    for pol, tr in traces.items():
+        print(f'    "{pol}": (')
+        for lane_tr in tr:
+            print(f"        {lane_tr!r},")
+        print("    ),")
+    print("}")

@@ -33,6 +33,21 @@ GOLDEN = {
     "MC":       (3126742386.201143, 3, 66811.0039111819),
 }
 
+# policy -> exact decision-event sequence (kind, kernel pair, split). The
+# totals above hold at 1e-9 rel to absorb BLAS last-bit drift behind the
+# Markov solves; these traces hold with ``==``, so a platform where a
+# KERNELET *decision* actually flips (different pair/split/order) fails
+# distinguishably from harmless last-bit drift in the totals.
+GOLDEN_TRACE = {
+    "BASE":     ("BASE:SPMV", "BASE:PC", "BASE:MM", "BASE:TEA"),
+    "KERNELET": ("co:PC+TEA@2:2", "co:SPMV+TEA@3:1", "co:MM+SPMV@3:1",
+                 "solo:SPMV"),
+    "OPT":      ("co:PC+TEA@2:2", "co:MM+TEA@3:1", "co:MM+SPMV@1:3",
+                 "solo:MM"),
+    "MC":       ("mc:MM+TEA@1:3", "mc:MM+SPMV@3:1", "mc:SPMV+PC@3:1",
+                 "solo:PC"),
+}
+
 
 @pytest.fixture(scope="module")
 def replay():
@@ -60,6 +75,17 @@ def test_golden_totals(replay, policy):
     assert res.total_cycles == pytest.approx(total, rel=1e-9)
     assert res.n_coschedules == n_cos
     assert res.n_slices == pytest.approx(n_slices, rel=1e-9)
+
+
+@pytest.mark.parametrize("policy", sorted(GOLDEN_TRACE))
+def test_golden_decision_trace(replay, policy):
+    """The exact decision sequence, pinned with ``==``: if this fails while
+    ``test_golden_totals`` passes within tolerance, a platform perturbed
+    the numerics without flipping any decision (retune the totals pin);
+    if this fails too, a decision genuinely changed."""
+    profs, truth, order = replay
+    res = run_policy(policy, profs, order, GPU, truth, seed=0)
+    assert tuple(ev for _, ev in res.time_line) == GOLDEN_TRACE[policy]
 
 
 def test_policy_ordering(replay):
@@ -114,3 +140,8 @@ if __name__ == "__main__":        # pin regeneration helper
         r = run_policy(pol, profs, order, GPU, truth, seed=0)
         print(f'    "{pol}": ({r.total_cycles!r}, {r.n_coschedules},'
               f' {r.n_slices!r}),')
+    print("GOLDEN_TRACE = {")
+    for pol in GOLDEN:
+        r = run_policy(pol, profs, order, GPU, truth, seed=0)
+        print(f'    "{pol}": {tuple(ev for _, ev in r.time_line)!r},')
+    print("}")

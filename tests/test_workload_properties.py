@@ -1,5 +1,6 @@
 """Property-based tests (hypothesis) on the workload engine: pending-queue
-conservation, drain-phase bounds, run_policy termination/determinism, and
+conservation, drain-phase bounds, run_policy termination/determinism,
+time-gated admission (a kernel is never charged before its arrival), and
 batched makespan-mode equivalence against the scalar reference simulator.
 
 Kept separate from tests/test_properties.py so these run without importing
@@ -16,6 +17,7 @@ from repro.core.queue import _Pending, _coexec_phase, make_workload, \
     run_policy
 from repro.core.simulator import (IPCTable, simulate_many,
                                   simulate_reference)
+from repro.data.synthetic import make_timed_workload
 
 GPU = C2050
 VG = GPU.virtual()
@@ -114,6 +116,69 @@ def test_run_policy_terminates_and_deterministic(policy, wl):
     assert a.total_cycles == b.total_cycles       # deterministic per seed
     assert a.n_coschedules == b.n_coschedules
     assert a.n_slices == b.n_slices
+
+
+# ------------------------------------------------------------------ #
+# time-gated admission: no kernel is ever charged before its arrival
+# ------------------------------------------------------------------ #
+def _phase_kernels(event):
+    """Kernel names referenced by one replay event ('co:A+B@2:6',
+    'solo:A', 'BASE:A', 'mc:A+B@1:3'; 'idle' references none)."""
+    if event == "idle":
+        return []
+    body = event.split(":", 1)[1]
+    return body.split("@", 1)[0].split("+")
+
+
+def test_pending_time_gated_admission_unit():
+    """Deterministic regression for the `_Pending` arrival gate."""
+    profiles = {"A": prof("A", 0.1, blocks=4), "B": prof("B", 0.2, blocks=2)}
+    pend = _Pending(profiles, ["A", "B", "A"], arrivals=[0.0, 50.0, 120.0])
+    assert pend.active() == [] and pend.has_pending()
+    assert pend.next_arrival() == 0.0
+    assert pend.admit_until(0.0) == 1          # only the t=0 instance
+    assert pend.blocks == {"A": 4.0}
+    assert pend.next_arrival() == 50.0
+    assert pend.admit_until(119.9) == 1        # B lands, A's 2nd does not
+    assert pend.blocks == {"A": 4.0, "B": 2.0}
+    pend.drain("A", 4.0)                       # retire the first A wave
+    assert pend.pop_completed(60.0) == [("A", 0.0, 60.0)]
+    assert pend.admit_until(120.0) == 1        # A re-admitted after retire
+    assert pend.blocks == {"B": 2.0, "A": 4.0}
+    assert not pend.has_pending() and pend.next_arrival() is None
+    pend.drain("B", 5.0)
+    pend.drain("A", 5.0)
+    assert pend.pop_completed(130.0) == [("B", 50.0, 130.0),
+                                         ("A", 120.0, 130.0)]
+    assert pend.completions == [("A", 0.0, 60.0), ("B", 50.0, 130.0),
+                                ("A", 120.0, 130.0)]
+
+
+@pytest.mark.parametrize("policy", ["BASE", "KERNELET", "OPT", "MC"])
+@given(wl=small_workloads(), scale=st.sampled_from([1e3, 1e5, 1e7]))
+@settings(max_examples=6, deadline=None)
+def test_never_charged_before_arrival(policy, wl, scale):
+    """Over random Poisson streams: every phase that charges co-exec or
+    solo time to a kernel must start at or after that kernel's first
+    arrival (time-gated admission), and every instance's completion must
+    be at or after its own arrival."""
+    profiles, instances, seed = wl
+    truth = IPCTable(VG, rounds=400, persist=False)
+    order, raw = make_timed_workload(sorted(profiles), instances=instances,
+                                     seed=seed)
+    arrivals = [t * scale for t in raw]
+    first_arrival = {}
+    for n, t in zip(order, arrivals):
+        first_arrival.setdefault(n, t)
+    res = run_policy(policy, profiles, order, GPU, truth, seed=seed,
+                     arrivals=arrivals)
+    start = 0.0
+    for total, event in res.time_line:
+        for n in _phase_kernels(event):
+            assert start >= first_arrival[n], (event, start)
+        assert total >= start                  # the clock never rewinds
+        start = total
+    assert all(c >= a for _, a, c in res.completions)
 
 
 # ------------------------------------------------------------------ #
