@@ -1,7 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-fast bench bench-smoke gc-cache clean-cache
+.PHONY: test lint bench-fast bench bench-smoke bench-gate gc-cache \
+	clean-cache
 
 # tier-1 verification (ROADMAP.md)
 test:
@@ -16,11 +17,25 @@ bench:
 	$(PYTHON) -m benchmarks.run
 
 # perf-trajectory guard (what the CI bench-smoke job runs): reduced
-# sweeps + history-schema validation, pure numpy
+# sweeps + history-schema validation, pure numpy, then the perf gate
 bench-smoke:
 	$(PYTHON) -m benchmarks.decision_latency --smoke
 	$(PYTHON) -m benchmarks.replay_throughput --smoke
 	$(PYTHON) -m benchmarks.arrival_latency --smoke
+	$(MAKE) bench-gate
+
+# perf-regression gate: self-test (an injected 2x slowdown must fail),
+# then compare fresh probes against the last tracked history entries —
+# >25% slowdown in decision-latency warm startup or replay throughput
+# fails the build (REPRO_BENCH_GATE_TOL / _ATTEMPTS to tune)
+bench-gate:
+	$(PYTHON) -m benchmarks.perf_gate --self-test
+	$(PYTHON) -m benchmarks.perf_gate
+
+# style gate (same as the CI lint job; needs ruff from requirements-dev)
+lint:
+	ruff check .
+	ruff format --check .
 
 # drop artifact-store files written under dead schema versions
 gc-cache:

@@ -1,13 +1,16 @@
 """Arrival-latency benchmark: throughput AND tail latency under online
-Poisson arrivals, per policy.
+Poisson arrivals, per policy — now including the arrival-aware family.
 
 The paper's workload metric (§5.4) is makespan over a known backlog; a
 shared GPU serving real tenants sees kernels land over time, so the
 quality of a policy is also its queue-wait distribution and SLO
 attainment. This bench replays one Poisson arrival stream (generated at a
 target utilization of the BASE-policy service capacity) through the
-arrival-timed workload engine under all four policies — one engine batch,
-shared measurement service — and records, per policy:
+arrival-timed workload engine under all six policies — the paper's four
+plus EDF-KERNELET (slack-weighted pair selection against per-instance
+deadlines) and PWAIT-CP (critical-path ordering weighted by predicted
+wait) — one engine batch, shared measurement service. Per policy it
+records:
 
   * ``makespan_cycles``   — completion time of the last kernel instance.
   * ``wait_p50/p95/mean`` — sojourn time (completion - arrival) percentiles.
@@ -15,12 +18,31 @@ shared measurement service — and records, per policy:
                             configured deadline of their arrival.
   * ``throughput_per_mcycle`` — completed instances per million cycles.
 
-``t0_equivalent`` is asserted in-bench: an all-zeros arrival schedule must
-reproduce the backlog-mode replay bit-identically (totals + event log) for
-every policy, so the latency numbers can never come from a silently
-different drain. Non-smoke runs append to the tracked history at
+Two invariants are asserted in-bench, so a record can never enter the
+history with a regressed policy family:
+
+  * ``t0_equivalent`` — an all-zeros arrival schedule must reproduce the
+    backlog-mode replay bit-identically (totals + event log) for every
+    policy (for EDF/PWAIT the oracle is the engine's own backlog lane).
+  * EDF-KERNELET's SLO attainment >= KERNELET's on the recorded stream
+    (the deadline-aware policy must not lose the deadline game at the
+    0.7-utilization operating point). PWAIT-CP's floor is enforced at
+    record time (``record_history``), since its deadline-blind
+    critical-path ordering may trade a tail instance at reduced smoke
+    scale.
+
+A fleet-dealing section replays a deterministic skewed stream
+(``make_skewed_workload``: heavy/light kernels alternating, the
+adversarial case for count-balanced dealing) over 2 GPUs under
+round-robin vs least-predicted-backlog dealing and asserts the
+least-backlog pooled p95 wait is strictly better.
+
+Non-smoke runs append to the tracked history at
 ``benchmarks/history/arrival_latency.jsonl``; ``--smoke`` runs a reduced
 sweep and validates the record and history schema instead (the CI guard).
+History lines are validated per generation: the per-policy fields checked
+for each line are exactly those of the policies the line recorded, and
+the fleet-dealing fields are required from the EDF generation on.
 """
 from __future__ import annotations
 
@@ -31,16 +53,16 @@ import time
 
 from benchmarks import history_schema
 from repro.core.calibrate import calibrated_benchmarks
-from repro.core.engine import LaneSpec, WorkloadEngine
+from repro.core.engine import LaneSpec, WorkloadEngine, run_fleet
 from repro.core.profiles import C2050
 from repro.core.queue import run_policy
 from repro.core.simulator import IPCTable
-from repro.data.synthetic import make_timed_workload
+from repro.data.synthetic import make_skewed_workload, make_timed_workload
 
 HISTORY_PATH = os.path.join("benchmarks", "history",
                             "arrival_latency.jsonl")
 
-POLICIES = ("BASE", "KERNELET", "OPT", "MC")
+POLICIES = ("BASE", "KERNELET", "OPT", "MC", "EDF-KERNELET", "PWAIT-CP")
 NAMES = ["PC", "TEA", "MM", "SPMV"]
 
 # per-policy metrics are flattened into the top-level record, so the shared
@@ -48,18 +70,81 @@ NAMES = ["PC", "TEA", "MM", "SPMV"]
 # parameters
 POLICY_FIELDS = ("makespan_cycles", "wait_p50", "wait_p95", "wait_mean",
                  "slo_attainment", "n_completed", "throughput_per_mcycle")
-REQUIRED_FIELDS = tuple(
-    ["instances", "rounds", "utilization", "rate_per_cycle",
-     "slo_deadline_cycles", "replay_s", "t0_equivalent"]
-    + [f"{p}_{f}" for p in POLICIES
-       for f in ("wait_p50", "wait_p95", "slo_attainment",
-                 "makespan_cycles")])
+_PER_POLICY = ("wait_p50", "wait_p95", "slo_attainment", "makespan_cycles")
+# the policy-independent schema every generation must carry
+BASE_FIELDS = ("instances", "rounds", "utilization", "rate_per_cycle",
+               "slo_deadline_cycles", "replay_s", "t0_equivalent")
+# the fleet-dealing section arrived with the EDF generation
+FLEET_FIELDS = ("fleet_rr_wait_p95", "fleet_lb_wait_p95",
+                "fleet_deal_gain")
+REQUIRED_FIELDS = tuple(BASE_FIELDS) + tuple(
+    f"{p}_{f}" for p in POLICIES for f in _PER_POLICY) + FLEET_FIELDS
+
+
+def _extra_for_entry(entry: dict):
+    """Per-generation history schema: each line must carry the latency
+    fields of exactly the policies it recorded, plus the fleet-dealing
+    fields once the record is from the EDF generation on."""
+    fields = [f"{p}_{f}" for p in entry.get("policies", ())
+              for f in _PER_POLICY]
+    if "EDF-KERNELET" in entry.get("policies", ()):
+        fields += list(FLEET_FIELDS)
+    return fields
+
+
+def _bench_dealing(profs, gpu, truth, slo: float) -> dict:
+    """Round-robin vs least-predicted-backlog dealing on a deterministic
+    skewed stream: a heavy tenant (MM at 4x blocks, ~4x the service time)
+    alternates with a light one (PC), so round-robin on 2 GPUs sends
+    every heavy instance to GPU 0 — balanced counts, maximally skewed
+    work, GPU 0 overloaded — while least-backlog spreads them. The gap is
+    set from the same model-predicted service times the dealer uses:
+    wide enough that the least-backlog split is stable, narrow enough
+    that round-robin's heavy GPU is not. The least-backlog pooled p95
+    wait must beat round-robin — asserted, so the dealing gain can never
+    silently rot."""
+    import dataclasses
+
+    from repro.core.markov import MarkovModel
+    from repro.core.queue import _solo_phase
+
+    heavy = dataclasses.replace(
+        profs["MM"], name="MM-heavy",
+        num_blocks=profs["MM"].num_blocks * 4)
+    mix = {"MM-heavy": heavy, "PC": profs["PC"]}
+    vg = gpu.virtual()
+    model = MarkovModel(vg, three_state=True)
+    svc = {n: _solo_phase(p, p.num_blocks,
+                          model.single_ipc(p, p.active_units(vg)), gpu)[0]
+           for n, p in mix.items()}
+    gap = (svc["MM-heavy"] + svc["PC"]) / 3.5
+    order, arrivals = make_skewed_workload(["MM-heavy", "PC"],
+                                           instances=8, gap=gap)
+    fleets = {
+        deal: run_fleet("KERNELET", mix, order, gpu, truth, 2,
+                        arrivals=arrivals, slo_deadline=slo, deal=deal)
+        for deal in ("round_robin", "least_backlog")
+    }
+    rr = fleets["round_robin"].latency
+    lb = fleets["least_backlog"].latency
+    if not lb["wait_p95"] < rr["wait_p95"]:
+        raise AssertionError(
+            "least-predicted-backlog dealing must beat round-robin pooled "
+            f"p95 wait on the skewed stream: {lb['wait_p95']} vs "
+            f"{rr['wait_p95']}")
+    return {
+        "fleet_rr_wait_p95": rr["wait_p95"],
+        "fleet_lb_wait_p95": lb["wait_p95"],
+        "fleet_rr_slo_attainment": rr["slo_attainment"],
+        "fleet_lb_slo_attainment": lb["slo_attainment"],
+        "fleet_deal_gain": rr["wait_p95"] / max(lb["wait_p95"], 1e-12),
+    }
 
 
 def bench(instances: int = 12, rounds: int = 2500,
           utilization: float = 0.7, slo_factor: float = 6.0,
           seed: int = 0) -> dict:
-    """One arrival stream, four policies. ``utilization`` sets the offered
+    """One arrival stream, six policies. ``utilization`` sets the offered
     load relative to the BASE backlog service capacity (arrival window =
     backlog makespan / utilization); the SLO deadline is ``slo_factor``
     mean service times (backlog makespan / number of instances)."""
@@ -120,20 +205,36 @@ def bench(instances: int = 12, rounds: int = 2500,
         for f in POLICY_FIELDS:
             rec[f"{p}_{f}"] = m[f]
     rec["latency"] = latency
+    # the deadline-aware policy must never lose the deadline game, at any
+    # sweep scale; PWAIT-CP (critical-path ordering, deadline-blind) may
+    # trade a tail instance at reduced smoke scale, so its floor is
+    # enforced at record time instead (nothing enters the tracked history
+    # violating it)
+    if (rec["EDF-KERNELET_slo_attainment"]
+            < rec["KERNELET_slo_attainment"]):
+        raise AssertionError(
+            "EDF-KERNELET SLO attainment "
+            f"{rec['EDF-KERNELET_slo_attainment']} fell below the "
+            f"KERNELET baseline {rec['KERNELET_slo_attainment']} at "
+            f"{utilization} utilization")
+    rec.update(_bench_dealing(profs, gpu, truth, slo))
     rec["headline"] = {
         "KERNELET_wait_p95": round(rec["KERNELET_wait_p95"], 1),
+        "EDF_wait_p95": round(rec["EDF-KERNELET_wait_p95"], 1),
+        "EDF_slo_attainment": rec["EDF-KERNELET_slo_attainment"],
         "KERNELET_slo_attainment": rec["KERNELET_slo_attainment"],
-        "OPT_wait_p95": round(rec["OPT_wait_p95"], 1),
+        "fleet_deal_gain": round(rec["fleet_deal_gain"], 2),
         "t0_equivalent": t0_equivalent,
-        "claim": "online Poisson arrivals replay with per-policy tail "
-                 "latency + SLO attainment; t=0 schedule bit-identical "
-                 "to backlog mode",
+        "claim": "arrival-aware policies (EDF slack / predicted wait) and "
+                 "least-backlog fleet dealing on the arrival-timed "
+                 "engine; t=0 schedule bit-identical to backlog mode",
     }
     validate_record(rec)
     return rec
 
 
 DELTA_KEYS = ("KERNELET_wait_p95", "OPT_wait_p95",
+              "EDF-KERNELET_wait_p95", "fleet_deal_gain",
               "KERNELET_makespan_cycles", "replay_s")
 
 
@@ -148,10 +249,17 @@ def validate_record(rec: dict) -> None:
 
 
 def validate_history(path: str = HISTORY_PATH) -> int:
-    return history_schema.validate_history(path, REQUIRED_FIELDS)
+    return history_schema.validate_history(path, BASE_FIELDS,
+                                           _extra_for_entry)
 
 
 def record_history(rec: dict, path: str = HISTORY_PATH) -> dict:
+    for p in ("EDF-KERNELET", "PWAIT-CP"):
+        if rec[f"{p}_slo_attainment"] < rec["KERNELET_slo_attainment"]:
+            raise AssertionError(
+                f"refusing to record: {p} SLO attainment "
+                f"{rec[f'{p}_slo_attainment']} below the KERNELET "
+                f"baseline {rec['KERNELET_slo_attainment']}")
     return history_schema.record_history(rec, path, DELTA_KEYS)
 
 

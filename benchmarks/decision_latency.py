@@ -36,8 +36,6 @@ import os
 import tempfile
 import time
 
-import numpy as np
-
 from benchmarks import history_schema
 from repro.core import markov
 from repro.core.calibrate import calibrated_benchmarks

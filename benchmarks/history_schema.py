@@ -20,9 +20,17 @@ def validate_record(rec: dict, required: Sequence[str], name: str) -> None:
         raise ValueError(f"{name} record missing fields: {missing}")
 
 
-def validate_history(path: str, required: Sequence[str]) -> int:
+def validate_history(path: str, required: Sequence[str],
+                     extra_for_entry=None) -> int:
     """Every history line must parse and carry the full schema; returns the
-    number of validated entries (0 when no history exists yet)."""
+    number of validated entries (0 when no history exists yet).
+
+    ``extra_for_entry`` (entry dict -> extra required field names) lets a
+    benchmark whose schema *grew* stay strict per generation: each line is
+    validated against the fields its own generation declares (e.g. the
+    per-policy latency fields for exactly the policies the line recorded),
+    instead of either failing old lines or silently under-checking new
+    ones."""
     try:
         with open(path) as f:
             lines = [ln.strip() for ln in f if ln.strip()]
@@ -30,17 +38,18 @@ def validate_history(path: str, required: Sequence[str]) -> int:
         return 0
     for i, ln in enumerate(lines):
         entry = json.loads(ln)
-        missing = [k for k in tuple(required) + ("recorded_at",)
-                   if k not in entry]
+        need = tuple(required) + ("recorded_at",)
+        if extra_for_entry is not None:
+            need += tuple(extra_for_entry(entry))
+        missing = [k for k in need if k not in entry]
         if missing:
             raise ValueError(f"{path}:{i + 1} missing fields: {missing}")
     return len(lines)
 
 
-def record_history(rec: dict, path: str,
-                   delta_keys: Sequence[str]) -> dict:
-    """Append a bench record (one JSON object per line) with ratios against
-    the previous entry under ``vs_prev``; returns the appended entry."""
+def last_entry(path: str):
+    """The most recent history entry (or ``None``): what perf-regression
+    gates compare a fresh record against."""
     prev = None
     try:
         with open(path) as f:
@@ -49,7 +58,15 @@ def record_history(rec: dict, path: str,
                 if line:
                     prev = json.loads(line)
     except (OSError, ValueError):
-        pass
+        return None
+    return prev
+
+
+def record_history(rec: dict, path: str,
+                   delta_keys: Sequence[str]) -> dict:
+    """Append a bench record (one JSON object per line) with ratios against
+    the previous entry under ``vs_prev``; returns the appended entry."""
+    prev = last_entry(path)
     entry = dict(rec)
     entry.pop("headline", None)
     entry["recorded_at"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())

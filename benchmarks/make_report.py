@@ -4,7 +4,6 @@
 """
 from __future__ import annotations
 
-import re
 
 from benchmarks.roofline import ADVICE, analyze, to_markdown
 

@@ -7,13 +7,11 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
-import time
 
 import numpy as np
 
 from repro.core.calibrate import calibrated_benchmarks
-from repro.core.markov import MarkovModel, balanced_slice_sizes, \
-    co_scheduling_profit
+from repro.core.markov import MarkovModel, co_scheduling_profit
 from repro.core.profiles import C2050, GTX680, WORKLOADS
 from repro.core.queue import make_workload, run_policy
 from repro.core.scheduler import KerneletScheduler

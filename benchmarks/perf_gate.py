@@ -1,0 +1,235 @@
+"""Perf-regression gate: fail CI when the hot paths actually got slower.
+
+The ``bench-smoke`` job validates history *schemas*, which catches rotted
+records but lets performance itself rot silently: a 10x slower decision
+path still emits a schema-valid record. This gate closes that hole. It
+re-measures the two load-bearing perf lanes and compares each against the
+tail of the tracked ``benchmarks/history/*.jsonl`` trajectory — the
+median of the last ``BASELINE_WINDOW`` (3) entries, so one outlier-fast
+recorded run cannot silently tighten the gate the way a raw last-entry
+baseline would (the history's own consecutive same-box entries swing by
+~1.6x on the millisecond-scale metrics):
+
+  * ``decision_latency`` / ``startup_warm_us`` (lower is better) — the
+    warm-process startup cost (calibration + first model-mode decision
+    with the artifact store warm), the latency every serving process pays.
+  * ``replay_throughput`` / ``lanes_per_s`` (higher is better) — warm
+    engine replay throughput at the tracked sweep configuration
+    (16 lanes, 40 instances, 2500 rounds).
+
+A lane fails when it is more than ``tolerance`` (default 25%,
+``REPRO_BENCH_GATE_TOL``) worse than the baseline. Wall-clock probes are
+noisy at the millisecond scale, so each lane takes the best of up to
+``attempts`` probes (default 3, ``REPRO_BENCH_GATE_ATTEMPTS``), stopping
+early once it passes — a genuine regression fails all attempts, a noise
+spike does not. Absolute-time baselines are machine-relative: when
+gating on hardware very different from where the history was recorded,
+widen the tolerance rather than deleting the gate.
+
+``--self-test`` proves the gate trips: it injects a synthetic 2x
+slowdown against the real baselines and exits non-zero if the gate does
+NOT fail it (and also checks a baseline-equal probe passes). CI runs the
+self-test before the real gate, so a gate that silently stopped gating
+is itself a red build.
+
+Usage:
+  python -m benchmarks.perf_gate               # run the gate (exit 1 on fail)
+  python -m benchmarks.perf_gate --self-test   # verify the gate trips on 2x
+  make bench-gate                              # both, in order
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+
+from benchmarks import decision_latency, replay_throughput
+
+REPORT_PATH = os.path.join("artifacts", "bench", "perf_gate.json")
+
+ENV_TOL = "REPRO_BENCH_GATE_TOL"
+ENV_ATTEMPTS = "REPRO_BENCH_GATE_ATTEMPTS"
+DEFAULT_TOL = 0.25
+DEFAULT_ATTEMPTS = 3
+BASELINE_WINDOW = 3
+
+
+def trailing_baseline(path: str, metric: str,
+                      window: int = BASELINE_WINDOW):
+    """Baseline for one lane: the median of ``metric`` over the last
+    ``window`` history entries that carry it (``None`` without history).
+    The median — not the last entry — because single recorded runs are
+    one unfiltered wall-clock sample; a lucky outlier must not become a
+    gate every later healthy run fails against."""
+    values = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                entry = json.loads(line)
+                if metric in entry:
+                    values.append(float(entry[metric]))
+    except (OSError, ValueError):
+        return None
+    if not values:
+        return None
+    return float(statistics.median(values[-window:]))
+
+
+def _probe_startup() -> float:
+    return float(decision_latency.bench_startup()["startup_warm_us"])
+
+
+def _probe_replay() -> float:
+    # the tracked history configuration, so the comparison is like-for-like
+    return float(replay_throughput.bench(
+        lanes=16, instances=40, rounds=2500)["lanes_per_s"])
+
+
+# (lane name, history path, metric, better, probe)
+LANES = (
+    ("decision_latency", decision_latency.HISTORY_PATH,
+     "startup_warm_us", "lower", _probe_startup),
+    ("replay_throughput", replay_throughput.HISTORY_PATH,
+     "lanes_per_s", "higher", _probe_replay),
+)
+
+
+def regressed(fresh: float, baseline: float, better: str,
+              tolerance: float) -> bool:
+    """True when ``fresh`` is more than ``tolerance`` worse than
+    ``baseline`` — symmetric in ratio space: a 2x slowdown fails a 25%
+    gate whether the metric is a time (lower better) or a rate (higher
+    better)."""
+    if baseline <= 0:
+        return False
+    if better == "lower":
+        return fresh > baseline * (1.0 + tolerance)
+    if better == "higher":
+        return fresh < baseline / (1.0 + tolerance)
+    raise ValueError(f"unknown direction {better!r}")
+
+
+def gate_lane(name: str, history_path: str, metric: str, better: str,
+              probe, *, tolerance: float, attempts: int,
+              fresh_override=None) -> dict:
+    """Gate one lane: probe up to ``attempts`` times (best value wins,
+    early exit on pass) against the trailing-median history baseline. A
+    lane with no baseline — or a degenerate zero one — passes vacuously
+    (nothing to gate against) but says so in the report."""
+    baseline = trailing_baseline(history_path, metric)
+    row = {"lane": name, "metric": metric, "better": better,
+           "baseline": baseline, "tolerance": tolerance}
+    if baseline is None or baseline <= 0:
+        row.update(fresh=None, ok=True,
+                   note="no usable baseline in history")
+        return row
+    best = None
+    probes = []
+    for _ in range(max(attempts, 1)):
+        value = (fresh_override if fresh_override is not None
+                 else float(probe()))
+        probes.append(value)
+        if best is None or (value < best if better == "lower"
+                            else value > best):
+            best = value
+        if not regressed(best, baseline, better, tolerance):
+            break
+        if fresh_override is not None:
+            break                    # injected value: retrying is pointless
+    row.update(fresh=best, probes=probes,
+               ok=not regressed(best, baseline, better, tolerance),
+               ratio=round(best / baseline, 3))
+    return row
+
+
+def run_gate(*, tolerance: float, attempts: int,
+             inject_factor: float = None) -> dict:
+    """Run every lane; ``inject_factor`` (self-test) replaces the probes
+    with ``baseline * factor`` for lower-is-better lanes and
+    ``baseline / factor`` for higher-is-better ones."""
+    rows = []
+    for name, path, metric, better, probe in LANES:
+        override = None
+        if inject_factor is not None:
+            base = trailing_baseline(path, metric)
+            if base is not None and base > 0:
+                override = (base * inject_factor if better == "lower"
+                            else base / inject_factor)
+        rows.append(gate_lane(name, path, metric, better, probe,
+                              tolerance=tolerance, attempts=attempts,
+                              fresh_override=override))
+    return {"tolerance": tolerance, "attempts": attempts,
+            "injected": inject_factor, "lanes": rows,
+            "ok": all(r["ok"] for r in rows)}
+
+
+def self_test(*, tolerance: float) -> int:
+    """The gate must fail an injected 2x slowdown on every lane that has
+    a baseline, and pass a baseline-equal measurement. Exit 0 when the
+    gate provably gates."""
+    slow = run_gate(tolerance=tolerance, attempts=1, inject_factor=2.0)
+    flat = run_gate(tolerance=tolerance, attempts=1, inject_factor=1.0)
+    problems = []
+    for row in slow["lanes"]:
+        if row["baseline"] is None:
+            problems.append(f"{row['lane']}: no baseline to gate against")
+        elif row["ok"]:
+            problems.append(f"{row['lane']}: 2x slowdown NOT caught")
+    for row in flat["lanes"]:
+        if row["baseline"] is not None and not row["ok"]:
+            problems.append(
+                f"{row['lane']}: baseline-equal measurement failed")
+    if problems:
+        print("perf-gate self-test FAILED:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print("perf-gate self-test OK: injected 2x slowdown fails every lane, "
+          "baseline-equal passes")
+    return 0
+
+
+def _write_report(report: dict) -> None:
+    os.makedirs(os.path.dirname(REPORT_PATH), exist_ok=True)
+    with open(REPORT_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate trips on an injected 2x "
+                         "slowdown instead of probing")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get(ENV_TOL, DEFAULT_TOL)),
+                    help="max allowed fractional slowdown vs the last "
+                         "history entry (default 0.25)")
+    ap.add_argument("--attempts", type=int,
+                    default=int(os.environ.get(ENV_ATTEMPTS,
+                                               DEFAULT_ATTEMPTS)),
+                    help="probes per lane, best value wins (default 3)")
+    args = ap.parse_args(argv)
+    if args.self_test:
+        return self_test(tolerance=args.tolerance)
+    report = run_gate(tolerance=args.tolerance, attempts=args.attempts)
+    _write_report(report)
+    for row in report["lanes"]:
+        status = "OK " if row["ok"] else "FAIL"
+        print(f"{status} {row['lane']}.{row['metric']}: "
+              f"fresh={row['fresh']} baseline={row['baseline']} "
+              f"({row['better']} is better, tol {row['tolerance']:.0%})")
+    if not report["ok"]:
+        print("perf gate FAILED: hot path regressed beyond tolerance "
+              f"(see {REPORT_PATH})")
+        return 1
+    print(f"perf gate OK (report: {REPORT_PATH})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,8 +29,7 @@ import os
 
 import numpy as np
 
-from repro.core.costs import (PEAK_FLOPS, HBM_BW, LINK_BW,
-    cell_cost, layer_flops_fwd, model_flops_fwd)
+from repro.core.costs import PEAK_FLOPS, HBM_BW, LINK_BW, cell_cost
 
 # --------------------------------------------------------------------- #
 # analytic implementation cost

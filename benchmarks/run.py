@@ -11,8 +11,6 @@ import json
 import os
 import time
 
-import numpy as np
-
 
 def _headline_str(rec) -> str:
     h = rec.get("headline", {})
@@ -29,8 +27,8 @@ def main() -> None:
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks.paper_figs import ALL_FIGS
-    from benchmarks import arrival_latency, decision_latency, \
-        replay_throughput, tpu_coschedule
+    from benchmarks import (arrival_latency, decision_latency,
+                            replay_throughput, tpu_coschedule)
 
     benches = dict(ALL_FIGS)
     benches["tpu_coschedule"] = tpu_coschedule.bench

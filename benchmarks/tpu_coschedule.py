@@ -14,7 +14,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.markov import MarkovModel, co_scheduling_profit
 from repro.core.profiles import TPU_V5E, tpu_profile_from_costs

@@ -17,7 +17,8 @@ import sys
 import time
 
 
-def fleet_replay(n_pods: int, arrival_rate: float = 0.0) -> None:
+def fleet_replay(n_pods: int, arrival_rate: float = 0.0,
+                 policy: str = "KERNELET", deal: str = "auto") -> None:
     """Replay the demo tenant mix over a simulated fleet of shared pods —
     one engine batch, one measurement service, one decision cache. Builds
     the tenant profiles analytically (compiled cost analysis is not needed
@@ -26,7 +27,10 @@ def fleet_replay(n_pods: int, arrival_rate: float = 0.0) -> None:
     With ``arrival_rate`` > 0 the replay is arrival-timed: tenant jobs
     land on a Poisson stream at that rate (events per simulated cycle)
     instead of forming a known backlog, and the fleet result reports
-    per-job queue wait and SLO attainment alongside the makespan."""
+    per-job queue wait and SLO attainment alongside the makespan.
+    ``policy`` picks the per-pod schedule (``EDF-KERNELET`` / ``PWAIT-CP``
+    are the arrival-aware family) and ``deal`` how the stream is split
+    over pods (``auto`` = least-predicted-backlog under arrivals)."""
     from repro.configs import SHAPES, get_config
     from repro.core.costs import cell_cost
     from repro.core.engine import WorkloadEngine, run_fleet
@@ -58,11 +62,12 @@ def fleet_replay(n_pods: int, arrival_rate: float = 0.0) -> None:
         slo = 2.0 / arrival_rate          # two mean interarrival gaps
     engine = WorkloadEngine()
     t0 = time.perf_counter()
-    fleet = run_fleet("KERNELET", profiles, order, TPU_V5E, truth, n_pods,
+    fleet = run_fleet(policy, profiles, order, TPU_V5E, truth, n_pods,
                       alpha_p=0.2, alpha_m=0.2, engine=engine,
-                      arrivals=arrivals, slo_deadline=slo)
+                      arrivals=arrivals, slo_deadline=slo, deal=deal)
     dt = time.perf_counter() - t0
-    print(f"fleet of {n_pods} pods: makespan {fleet.makespan:.0f} cycles, "
+    print(f"fleet of {n_pods} pods ({policy}, {fleet.deal} dealing): "
+          f"makespan {fleet.makespan:.0f} cycles, "
           f"{fleet.n_coschedules} co-schedules, replay took {dt * 1e3:.1f}ms")
     for g, lane in enumerate(fleet.lanes):
         events = ", ".join(ev for _, ev in lane.time_line)
@@ -93,9 +98,20 @@ if __name__ == "__main__":
                     help="arrival-timed replay: tenant jobs land on a "
                          "Poisson stream at RATE events per simulated "
                          "cycle (implies --fleet 1 unless given)")
+    ap.add_argument("--policy", default="KERNELET",
+                    choices=["BASE", "KERNELET", "OPT", "MC",
+                             "EDF-KERNELET", "PWAIT-CP"],
+                    help="per-pod scheduling policy for the simulated "
+                         "replay (EDF-KERNELET / PWAIT-CP are "
+                         "arrival-aware)")
+    ap.add_argument("--deal", default="auto",
+                    choices=["auto", "round_robin", "least_backlog"],
+                    help="fleet dealing policy (auto = least-predicted-"
+                         "backlog under arrivals, round-robin otherwise)")
     args = ap.parse_args()
     if args.fleet or args.arrivals:
-        fleet_replay(max(args.fleet, 1), arrival_rate=args.arrivals)
+        fleet_replay(max(args.fleet, 1), arrival_rate=args.arrivals,
+                     policy=args.policy, deal=args.deal)
         sys.exit(0)
     from repro.launch.serve import demo
     demo()

@@ -8,7 +8,6 @@ dry-run lowers and the Kernelet scheduler treats as a schedulable kernel.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 

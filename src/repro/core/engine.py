@@ -32,22 +32,46 @@ engine that advances many independent replay *lanes* at once:
     to their next arrival, and per-instance completion records feed
     latency/SLO metrics (``WorkloadResult.latency_metrics``). The all-zeros
     schedule is pinned bit-identical to backlog mode by tests.
+  * **Arrival-aware policies.** ``EDF-KERNELET`` ranks the active set by
+    slack to each instance's deadline (``LaneSpec.deadlines``, or
+    ``arrival + slo_deadline``) and always serves the most urgent kernel,
+    pairing it with the max-CP partner; ``PWAIT-CP`` ranks by predicted
+    time-to-completion (remaining blocks over the Markov-model solo IPC —
+    the measurement service as wait predictor) plus accumulated wait.
+    Both ride ``KerneletScheduler.find_coschedule_ranked``, whose memo and
+    persistent cache keys fold in the urgency ranking, so deadline changes
+    can never replay a stale decision.
+  * **Fleet dealing.** ``run_fleet`` deals one arrival stream over N GPUs
+    via a pluggable ``DealPolicy``: ``RoundRobinDeal`` (the paper-era
+    arrival-blind deal) or ``LeastBacklogDeal`` (greedy
+    least-predicted-backlog, the default under arrivals, with a one-phase
+    engine replay per kernel type as the service predictor).
 
 The phase arithmetic is element-for-element the same IEEE-754 sequence as
 the scalar ``_coexec_phase``/``_solo_phase`` helpers, so batching changes
-wall-clock, never results.
+wall-clock, never results. Arrival-timed lanes additionally interpolate
+completion timestamps linearly in drained blocks within each charged
+phase (``_Pending.begin_phase``; ``LaneSpec.interpolate=False`` restores
+the PR 4 phase-end granularity) — totals and event logs are untouched, so
+the t=0 == backlog pin holds with interpolation on.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core.markov import MarkovModel
 from repro.core.profiles import GPUSpec, KernelProfile
-from repro.core.queue import WorkloadResult, _Pending
+from repro.core.queue import WorkloadResult, _Pending, _solo_phase
 from repro.core.scheduler import KerneletScheduler
 from repro.core.simulator import IPCTable
+
+# policies that decide via a KerneletScheduler (model or oracle mode); the
+# last two are the arrival-aware family (deadline slack / predicted wait)
+SCHEDULED_POLICIES = ("KERNELET", "OPT", "EDF-KERNELET", "PWAIT-CP")
+RANKED_POLICIES = ("EDF-KERNELET", "PWAIT-CP")
 
 
 @dataclasses.dataclass
@@ -61,7 +85,13 @@ class LaneSpec:
     next arrival, and per-instance completion records are collected for
     latency/SLO metrics. ``None`` (default) is the paper's backlog mode —
     and an arrival schedule that is all zeros is pinned bit-identical to
-    it (totals and event log) by tests."""
+    it (totals and event log) by tests.
+
+    ``deadlines`` (absolute, parallel to ``order``) gives each instance
+    its own deadline for EDF-KERNELET; when absent, deadlines default to
+    ``arrival + slo_deadline`` (one relative wait budget for every
+    instance). ``interpolate=False`` turns off within-phase completion
+    interpolation (timestamps revert to phase-end granularity)."""
     policy: str
     profiles: Dict[str, KernelProfile]
     order: List[str]
@@ -75,19 +105,23 @@ class LaneSpec:
     label: Optional[str] = None
     arrivals: Optional[Sequence[float]] = None
     slo_deadline: Optional[float] = None
+    deadlines: Optional[Sequence[float]] = None
+    interpolate: bool = True
 
 
 @dataclasses.dataclass
 class FleetResult:
     """A homogeneous multi-GPU replay: per-GPU lane results plus the fleet
     aggregates (makespan = slowest GPU, the workload-throughput metric).
-    Arrival-timed fleets also carry the pooled latency metrics."""
+    Arrival-timed fleets also carry the pooled latency metrics; ``deal``
+    names the dealing policy that split the stream."""
     lanes: List[WorkloadResult]
     makespan: float
     total_cycles: float
     n_coschedules: int
     n_slices: float
     latency: Optional[dict] = None
+    deal: str = "round_robin"
 
 
 def aggregate_latency(results: Sequence[WorkloadResult],
@@ -107,7 +141,10 @@ class _Lane:
 
     def __init__(self, spec: LaneSpec, sched: Optional[KerneletScheduler]):
         self.spec = spec
-        self.pend = _Pending(spec.profiles, spec.order, spec.arrivals)
+        self.pend = _Pending(spec.profiles, spec.order, spec.arrivals,
+                             deadlines=spec.deadlines,
+                             rel_deadline=spec.slo_deadline,
+                             interpolate=spec.interpolate)
         self.sched = sched
         self.total = 0.0
         self.n_cos = 0
@@ -189,12 +226,75 @@ class WorkloadEngine:
         return sched
 
     def _lane_scheduler(self, spec: LaneSpec) -> Optional[KerneletScheduler]:
-        if spec.policy not in ("KERNELET", "OPT"):
+        if spec.policy not in SCHEDULED_POLICIES:
             return None
         return self.scheduler_for(
             spec.gpu, spec.profiles, alpha_p=spec.alpha_p,
             alpha_m=spec.alpha_m, cp_margin=spec.cp_margin,
             decision_table=spec.truth if spec.policy == "OPT" else None)
+
+    # ---- urgency ranking for the arrival-aware policies ---- #
+    @staticmethod
+    def _predicted_service(lane: _Lane, name: str, blocks: float) -> float:
+        """Predicted cycles to drain ``blocks`` of ``name`` served solo —
+        the Markov-model (or, for oracle-mode lanes, measured) solo IPC as
+        the wait predictor, same arithmetic as ``_solo_phase``."""
+        prof = lane.spec.profiles[name]
+        ipc = lane.sched.solo_ipc(name)
+        return blocks * prof.insns_per_block / max(
+            ipc * lane.spec.gpu.n_sm, 1e-12)
+
+    @classmethod
+    def _edf_rank(cls, lane: _Lane, act: Sequence[str]):
+        """EDF-KERNELET's slack-weighted selection: pin the earliest-
+        deadline kernel only when it is *at risk* — its oldest pending
+        instance cannot afford to be served after everything else — and
+        still *feasible* (served now, it would meet its deadline; a
+        hopeless instance must not preempt savable work). Returns the
+        urgency-ranked tuple to pin, or ``None`` for the plain max-CP
+        KERNELET decision (no kernel at risk: deadlines are not binding,
+        so throughput rules; this also makes deadline-free and backlog
+        lanes decide exactly like KERNELET)."""
+        pend = lane.pend
+        now = lane.total
+        dl, arr, head_svc, full_svc = {}, {}, {}, {}
+        for n in act:
+            dl[n] = pend.earliest_deadline(n)
+            arr[n] = pend.earliest_arrival(n)
+            head_svc[n] = cls._predicted_service(
+                lane, n, pend.head_remaining(n))
+            full_svc[n] = cls._predicted_service(lane, n, pend.blocks[n])
+        total_svc = sum(full_svc.values())
+        at_risk = [
+            n for n in act
+            if np.isfinite(dl[n])
+            # feasible: served immediately, the head instance makes it
+            and now + head_svc[n] <= dl[n]
+            # at risk: served last (after every other kernel), it misses
+            and now + (total_svc - full_svc[n]) + head_svc[n] > dl[n]]
+        if not at_risk:
+            return None
+        head = min(at_risk, key=lambda n: (dl[n], arr[n], n))
+        rest = sorted((n for n in act if n != head),
+                      key=lambda n: (dl[n], arr[n], n))
+        return (head, *rest)
+
+    @classmethod
+    def _pwait_rank(cls, lane: _Lane, act: Sequence[str]):
+        """PWAIT-CP's critical-path ordering: rank by predicted time-to-
+        completion if served now (remaining blocks over the predicted
+        solo IPC) plus the time the oldest pending instance has already
+        waited — the largest total is the critical path under load and is
+        always served this phase."""
+        pend = lane.pend
+        now = lane.total
+        key = {}
+        for i, n in enumerate(act):
+            service = cls._predicted_service(lane, n, pend.blocks[n])
+            a = pend.earliest_arrival(n)
+            waited = max(now - a, 0.0) if np.isfinite(a) else 0.0
+            key[n] = (-(service + waited), i)
+        return tuple(sorted(act, key=key.__getitem__))
 
     # ---- decision phase (per lane, mirrors the scalar branch order) ---- #
     def _decide(self, lane: _Lane) -> _Action:
@@ -239,8 +339,16 @@ class WorkloadEngine:
             return _Action(lane, "solo", f"solo:{n1}", False, n1=n1, p1=p1,
                            b1=pend.blocks[n1], s1=0)
 
-        # KERNELET / OPT
-        cs = lane.sched.find_coschedule(act)
+        # KERNELET / OPT / EDF-KERNELET / PWAIT-CP
+        ranked = None
+        if spec.policy == "EDF-KERNELET":
+            ranked = self._edf_rank(lane, act)
+        elif spec.policy == "PWAIT-CP":
+            ranked = self._pwait_rank(lane, act)
+        if ranked is not None:
+            cs = lane.sched.find_coschedule_ranked(ranked)
+        else:
+            cs = lane.sched.find_coschedule(act)
         self.stats["decisions"] += 1
         if cs.k2 is None:
             p1 = profiles[cs.k1]
@@ -373,6 +481,7 @@ class WorkloadEngine:
                 t, d1, d2, sl = self._charge_co(co)
                 for j, a in enumerate(co):
                     ln = a.lane
+                    ln.pend.begin_phase(ln.total)
                     ln.pend.drain(a.n1, d1[j])
                     ln.pend.drain(a.n2, d2[j])
                     ln.total = ln.total + t[j]
@@ -385,6 +494,7 @@ class WorkloadEngine:
                 t, n_sl, d = self._charge_solo(solo)
                 for j, a in enumerate(solo):
                     ln = a.lane
+                    ln.pend.begin_phase(ln.total)
                     ln.pend.drain(a.n1, d[j])
                     ln.total = ln.total + t[j]
                     if a.count:
@@ -400,37 +510,148 @@ def run_lanes(specs: Sequence[LaneSpec]) -> List[WorkloadResult]:
     return WorkloadEngine().run(specs)
 
 
+class DealPolicy:
+    """Assigns every entry of one arrival stream to a fleet GPU.
+
+    ``assign`` returns one GPU index per ``order`` entry; ``run_fleet``
+    splits the stream accordingly. Subclass to plug in custom placement
+    (heterogeneous fleets, affinity, …)."""
+
+    name = "deal"
+
+    def assign(self, order: Sequence[str],
+               arrivals: Optional[Sequence[float]], n_gpus: int, *,
+               profiles: Dict[str, KernelProfile],
+               gpu: GPUSpec) -> List[int]:
+        raise NotImplementedError
+
+
+class RoundRobinDeal(DealPolicy):
+    """The paper-era arrival-blind deal: instance i goes to GPU
+    ``i % n_gpus`` (exactly the former ``order[g::n_gpus]`` split). Counts
+    are balanced; work is not — a stream whose heavy kernels recur with a
+    period sharing a factor with ``n_gpus`` pins them all to one GPU."""
+
+    name = "round_robin"
+
+    def assign(self, order, arrivals, n_gpus, *, profiles, gpu):
+        return [i % n_gpus for i in range(len(order))]
+
+
+class LeastBacklogDeal(DealPolicy):
+    """Greedy least-predicted-backlog dealing: each arrival goes to the
+    GPU with the smallest predicted outstanding work at its timestamp,
+    whose ledger is then charged the instance's predicted service time.
+
+    The default predictor is a one-phase engine replay per kernel type —
+    ``_solo_phase`` (the engine's own solo arithmetic) on the Markov
+    model's solo IPC, memoized per name — i.e. the measurement service
+    predicts the backlog, no real replay needed. Pass ``predictor``
+    (``name -> predicted cycles per instance``) to plug in a different
+    estimate (e.g. measured IPCs, or per-GPU speeds for mixed fleets)."""
+
+    name = "least_backlog"
+
+    def __init__(self, predictor=None):
+        self.predictor = predictor
+
+    def assign(self, order, arrivals, n_gpus, *, profiles, gpu):
+        pred = self.predictor
+        if pred is None:
+            vg = gpu.virtual()
+            model = MarkovModel(vg, three_state=True)
+            cache: Dict[str, float] = {}
+
+            def pred(n):
+                if n not in cache:
+                    p = profiles[n]
+                    ipc = model.single_ipc(p, p.active_units(vg))
+                    cache[n] = _solo_phase(p, p.num_blocks, ipc, gpu)[0]
+                return cache[n]
+
+        ts = arrivals if arrivals is not None else [0.0] * len(order)
+        busy = [0.0] * n_gpus
+        out = [0] * len(order)
+        # greedy pass in arrival-time order (stable on ties, matching
+        # _Pending's admission sort): the stream API accepts unsorted
+        # timestamps everywhere else, and charging the ledgers out of
+        # time order would make the backlog prediction arbitrary
+        for i in sorted(range(len(order)), key=lambda j: (ts[j], j)):
+            t, n = ts[i], order[i]
+            g = min(range(n_gpus),
+                    key=lambda k: (max(busy[k] - t, 0.0), k))
+            out[i] = g
+            busy[g] = max(busy[g], t) + pred(n)
+        return out
+
+
+_DEALS = {"round_robin": RoundRobinDeal, "least_backlog": LeastBacklogDeal}
+
+
+def resolve_deal(deal: Union[str, DealPolicy],
+                 arrivals: Optional[Sequence[float]]) -> DealPolicy:
+    """``"auto"`` (the default) deals least-predicted-backlog when the
+    stream is arrival-timed and round-robin in backlog mode (which keeps
+    the backlog fleet pins bit-identical to the pre-DealPolicy split)."""
+    if isinstance(deal, DealPolicy):
+        return deal
+    if deal == "auto":
+        deal = "least_backlog" if arrivals is not None else "round_robin"
+    try:
+        return _DEALS[deal]()
+    except KeyError:
+        raise ValueError(f"unknown deal policy {deal!r}: "
+                         f"expected 'auto', one of {sorted(_DEALS)}, or a "
+                         "DealPolicy instance") from None
+
+
 def run_fleet(policy: str, profiles: Dict[str, KernelProfile],
               order: List[str], gpu: GPUSpec, truth: IPCTable,
               n_gpus: int, *, alpha_p: float = 0.4, alpha_m: float = 0.1,
               cp_margin: Optional[float] = None, seed: int = 0,
               engine: Optional[WorkloadEngine] = None,
               arrivals: Optional[Sequence[float]] = None,
-              slo_deadline: Optional[float] = None) -> FleetResult:
+              slo_deadline: Optional[float] = None,
+              deadlines: Optional[Sequence[float]] = None,
+              interpolate: bool = True,
+              deal: Union[str, DealPolicy] = "auto") -> FleetResult:
     """Replay one arrival stream over a homogeneous fleet of ``n_gpus``
-    GPUs: arrivals are dealt round-robin (GPU g takes ``order[g::n_gpus]``,
-    the arrival-order analogue of least-loaded dispatch under the paper's
-    equal-rate Poisson mixes), every lane shares ``truth`` (one measurement
-    service) and, via the engine, one scheduler decision cache. The fleet
-    makespan — the slowest GPU's total — is the workload metric.
+    GPUs: the stream is split by ``deal`` (see ``resolve_deal`` —
+    round-robin in backlog mode, least-predicted-backlog under arrivals,
+    or any ``DealPolicy`` instance), every lane shares ``truth`` (one
+    measurement service) and, via the engine, one scheduler decision
+    cache. The fleet makespan — the slowest GPU's total — is the workload
+    metric.
 
     With ``arrivals`` (timestamps parallel to ``order``, dealt with it)
     every lane replays arrival-timed, and the result additionally carries
     the pooled latency metrics (p50/p95 wait, and SLO attainment when
-    ``slo_deadline`` is given)."""
+    ``slo_deadline`` is given). ``deadlines`` (absolute, parallel to
+    ``order``) feed EDF-KERNELET lanes per-instance deadlines."""
     if n_gpus < 1:
         raise ValueError("n_gpus must be >= 1")
     if arrivals is not None and len(arrivals) != len(order):
         raise ValueError("arrivals must parallel order")
+    if deadlines is not None and len(deadlines) != len(order):
+        raise ValueError("deadlines must parallel order")
+    dealer = resolve_deal(deal, arrivals)
+    assign = dealer.assign(order, arrivals, n_gpus,
+                           profiles=profiles, gpu=gpu)
+    parts = [[] for _ in range(n_gpus)]      # per-GPU entry indices
+    for i, g in enumerate(assign):
+        parts[g].append(i)
     eng = engine if engine is not None else WorkloadEngine()
     specs = [LaneSpec(policy=policy, profiles=profiles,
-                      order=list(order[g::n_gpus]), gpu=gpu, truth=truth,
+                      order=[order[i] for i in part], gpu=gpu, truth=truth,
                       alpha_p=alpha_p, alpha_m=alpha_m,
                       cp_margin=cp_margin, seed=seed + g, label=f"gpu{g}",
                       arrivals=(None if arrivals is None
-                                else list(arrivals[g::n_gpus])),
-                      slo_deadline=slo_deadline)
-             for g in range(n_gpus)]
+                                else [arrivals[i] for i in part]),
+                      slo_deadline=slo_deadline,
+                      deadlines=(None if deadlines is None
+                                 else [deadlines[i] for i in part]),
+                      interpolate=interpolate)
+             for g, part in enumerate(parts)]
     results = eng.run(specs)
     return FleetResult(
         lanes=results,
@@ -439,4 +660,5 @@ def run_fleet(policy: str, profiles: Dict[str, KernelProfile],
         n_coschedules=sum(r.n_coschedules for r in results),
         n_slices=float(sum(r.n_slices for r in results)),
         latency=(aggregate_latency(results, slo_deadline)
-                 if arrivals is not None else None))
+                 if arrivals is not None else None),
+        deal=dealer.name)

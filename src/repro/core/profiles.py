@@ -20,7 +20,6 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-import math
 
 
 def content_digest(spec) -> str:

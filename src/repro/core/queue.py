@@ -90,15 +90,31 @@ class _Pending:
     arrival-timed replays can derive queue-wait / SLO metrics. Admission
     order is arrival order (stable for ties), so a schedule with every
     arrival at t=0 builds the exact ledger the backlog constructor builds.
+
+    ``deadlines`` (absolute, one per ``order`` entry) or ``rel_deadline``
+    (one wait budget added to every arrival) attach a deadline to each
+    instance; ``earliest_deadline``/``earliest_arrival`` expose the head
+    of the per-name FIFO ledgers to deadline/wait-aware policies
+    (EDF-KERNELET, PWAIT-CP). ``interpolate`` sharpens completion
+    timestamps: with a phase window registered via ``begin_phase``,
+    instances retired inside the phase are stamped linearly in drained
+    blocks instead of at phase-end granularity. Backlog queues record no
+    completions, so interpolation is inert there by construction.
     """
 
     def __init__(self, profiles, order,
-                 arrivals: Optional[Sequence[float]] = None):
+                 arrivals: Optional[Sequence[float]] = None,
+                 deadlines: Optional[Sequence[float]] = None,
+                 rel_deadline: Optional[float] = None,
+                 interpolate: bool = True):
         self.profiles = profiles
         self.blocks = {}
         self._order = {}                     # queue order with dedup
-        self._queue = collections.deque()    # unadmitted (arrival, name)
+        self._queue = collections.deque()    # unadmitted (arr, name, dl)
         self._timed = arrivals is not None
+        self._interp = bool(interpolate)
+        self._phase_start: Optional[float] = None
+        self._phase_base: dict = {}          # _drained snapshot at phase start
         self.completions: list = []          # (name, arrival, completion)
         if not self._timed:
             for n in order:
@@ -109,11 +125,19 @@ class _Pending:
         if len(arrivals) != len(order):
             raise ValueError("arrivals must parallel order: "
                              f"{len(arrivals)} != {len(order)}")
+        if deadlines is not None and len(deadlines) != len(order):
+            raise ValueError("deadlines must parallel order: "
+                             f"{len(deadlines)} != {len(order)}")
+        if deadlines is None:
+            deadlines = ([a + rel_deadline for a in arrivals]
+                         if rel_deadline is not None
+                         else [np.inf] * len(order))
         self._admitted = {}                  # name -> cum admitted blocks
         self._drained = {}                   # name -> cum drained blocks
-        self._instances = {}                 # name -> deque[(arr, cum)]
+        self._instances = {}                 # name -> deque[(arr, cum, dl)]
         events = sorted(zip(arrivals, range(len(order))))  # stable on ties
-        self._queue.extend((float(t), order[i]) for t, i in events)
+        self._queue.extend((float(t), order[i], float(deadlines[i]))
+                           for t, i in events)
 
     @property
     def order(self):
@@ -135,23 +159,83 @@ class _Pending:
         n_adm = 0
         q = self._queue
         while q and q[0][0] <= now:
-            t, n = q.popleft()
+            t, n, dl = q.popleft()
             nb = self.profiles[n].num_blocks
             self.blocks[n] = self.blocks.get(n, 0.0) + nb
             self._order.setdefault(n, None)
             cum = self._admitted.get(n, 0.0) + nb
             self._admitted[n] = cum
             self._instances.setdefault(
-                n, collections.deque()).append((t, cum))
+                n, collections.deque()).append((t, cum, dl))
             n_adm += 1
         return n_adm
+
+    # ---- deadline/wait inputs for arrival-aware policies ---- #
+    def earliest_deadline(self, name: str) -> float:
+        """Deadline of the oldest admitted-but-uncompleted instance of
+        ``name`` (FIFO head); +inf when untimed, undeadlined, or done."""
+        if not self._timed:
+            return float(np.inf)
+        q = self._instances.get(name)
+        return q[0][2] if q else float(np.inf)
+
+    def earliest_arrival(self, name: str) -> float:
+        """Arrival of the oldest admitted-but-uncompleted instance of
+        ``name``; +inf when untimed or done (so fully drained names sort
+        last in any urgency ranking)."""
+        if not self._timed:
+            return float(np.inf)
+        q = self._instances.get(name)
+        return q[0][0] if q else float(np.inf)
+
+    def head_remaining(self, name: str) -> float:
+        """Blocks still to drain before the oldest pending instance of
+        ``name`` completes (its cumulative-admitted threshold minus the
+        blocks drained so far) — the work its deadline is actually
+        gated on, as opposed to ``blocks[name]`` which includes every
+        later instance too. Backlog queues: the whole remaining ledger."""
+        if not self._timed:
+            return self.blocks.get(name, 0.0)
+        q = self._instances.get(name)
+        if not q:
+            return 0.0
+        return max(q[0][1] - self._drained.get(name, 0.0), 0.0)
+
+    # ---- phase window for completion-time interpolation ---- #
+    def begin_phase(self, start: float) -> None:
+        """Register the start of a charged phase. With interpolation on,
+        the next ``pop_completed(now)`` stamps instances retired inside
+        [start, now] linearly in drained blocks instead of at ``now``."""
+        if self._timed and self._interp:
+            self._phase_start = start
+            self._phase_base = dict(self._drained)
+
+    def _completion_time(self, name: str, cum: float, now: float) -> float:
+        """Timestamp for an instance whose cumulative-admitted threshold
+        ``cum`` was crossed by ``now``: linear in blocks drained across the
+        current phase window when one is registered, else ``now`` (the
+        phase-end granularity of PR 4)."""
+        start = self._phase_start
+        if start is None or start >= now:
+            return now
+        base = self._phase_base.get(name, 0.0)
+        drained = self._drained.get(name, 0.0)
+        if drained <= base:
+            return now
+        frac = min(1.0, max(0.0, (cum - base) / (drained - base)))
+        return start + frac * (now - start)
 
     def pop_completed(self, now: float) -> list:
         """Record (and return) instances fully drained by ``now``: instance
         j of a kernel completes when its cumulative drained blocks reach
         the cumulative admitted blocks through instance j (FIFO within a
         name). The 1e-9 relative slack only absorbs float accumulation on
-        partial drains; full retirement snaps the ledger exactly."""
+        partial drains; full retirement snaps the ledger exactly.
+
+        Within one phase window the interpolated stamps may cross between
+        kernel names, so the batch is sorted by completion time before it
+        is appended — phases never overlap, so the global record stays
+        monotone."""
         if not self._timed or not self._instances:
             return []
         done = []
@@ -159,10 +243,12 @@ class _Pending:
             q = self._instances[n]
             drained = self._drained.get(n, 0.0)
             while q and drained + 1e-9 * max(1.0, q[0][1]) >= q[0][1]:
-                arr, _ = q.popleft()
-                done.append((n, arr, now))
+                arr, cum, _ = q.popleft()
+                done.append((n, arr, self._completion_time(n, cum, now)))
             if not q:
                 del self._instances[n]
+        done.sort(key=lambda rec: rec[2])
+        self._phase_start = None
         self.completions.extend(done)
         return done
 
@@ -210,7 +296,10 @@ def run_policy(policy: str, profiles: Dict[str, KernelProfile],
                order: List[str], gpu: GPUSpec, truth: IPCTable,
                *, alpha_p: float = 0.4, alpha_m: float = 0.1,
                seed: int = 0, mc_rng=None,
-               arrivals: Optional[Sequence[float]] = None) -> WorkloadResult:
+               arrivals: Optional[Sequence[float]] = None,
+               slo_deadline: Optional[float] = None,
+               deadlines: Optional[Sequence[float]] = None,
+               interpolate: bool = True) -> WorkloadResult:
     """Drain one workload under one policy — a single-lane run of the
     vectorized workload engine (``repro.core.engine``), pinned bit-identical
     to the scalar ``run_policy_reference`` implementation by tests.
@@ -221,11 +310,17 @@ def run_policy(policy: str, profiles: Dict[str, KernelProfile],
     fast-forward to the next arrival, and the result carries per-instance
     completion records (``WorkloadResult.completions`` /
     ``latency_metrics``). A schedule with every arrival at t=0 is pinned
-    bit-identical (totals and event log) to the backlog mode."""
+    bit-identical (totals and event log) to the backlog mode.
+
+    ``deadlines`` / ``slo_deadline`` attach per-instance deadlines (used
+    by the EDF-KERNELET policy); ``interpolate=False`` reverts completion
+    timestamps to phase-end granularity."""
     from repro.core.engine import LaneSpec, WorkloadEngine
     spec = LaneSpec(policy=policy, profiles=profiles, order=order, gpu=gpu,
                     truth=truth, alpha_p=alpha_p, alpha_m=alpha_m,
-                    seed=seed, mc_rng=mc_rng, arrivals=arrivals)
+                    seed=seed, mc_rng=mc_rng, arrivals=arrivals,
+                    slo_deadline=slo_deadline, deadlines=deadlines,
+                    interpolate=interpolate)
     return WorkloadEngine().run([spec])[0]
 
 

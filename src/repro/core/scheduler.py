@@ -18,8 +18,8 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core import ipc_cache, slicing
-from repro.core.markov import MARKOV_SCHEMA, MarkovModel, \
-    balanced_slice_sizes, co_scheduling_profit
+from repro.core.markov import (MARKOV_SCHEMA, MarkovModel,
+                               balanced_slice_sizes, co_scheduling_profit)
 from repro.core.profiles import GPUSpec, KernelProfile, content_digest
 from repro.core.simulator import IPCTable
 
@@ -99,7 +99,8 @@ class KerneletScheduler:
 
     def __init__(self, gpu: GPUSpec, profiles: Dict[str, KernelProfile],
                  *, alpha_p: float = 0.4, alpha_m: float = 0.1,
-                 three_state: bool = True, decision_table: Optional[IPCTable] = None,
+                 three_state: bool = True,
+                 decision_table: Optional[IPCTable] = None,
                  p_overhead: float = 2.0, cp_margin: float = None):
         self.gpu = gpu
         self.vgpu = gpu.virtual()
@@ -266,6 +267,86 @@ class KerneletScheduler:
             self._decision_cache[key] = hit
         return hit
 
+    # ---- urgency-ranked FindCoSchedule (arrival-aware policies) ---- #
+    def find_coschedule_ranked(self, ranked) -> Optional[CoSchedule]:
+        """Deadline/wait-aware variant of ``find_coschedule``: ``ranked``
+        is the active set ordered by urgency, head first (EDF slack, or
+        predicted wait — computed by the caller). The head kernel is
+        always served this phase; the partner and occupancy split are
+        chosen by max CP among head-containing candidates, with ties
+        resolved toward the more urgent partner. Falls back to the head
+        solo (sliced) when no pair clears ``cp_margin``.
+
+        Decisions are memoized — and persisted — on the full *ordered*
+        tuple, so the deadline/wait inputs that produced the ranking fold
+        into both cache keys: a replay with different deadlines can never
+        be served a stale decision (the ``ranked|`` prefix also keeps
+        these entries disjoint from the unordered ``find_coschedule``
+        family)."""
+        ranked = tuple(ranked)
+        if not ranked:
+            return None
+        key = ("ranked", ranked)
+        hit = self._decision_cache.get(key)
+        if hit is None:
+            store = self._decision_store()
+            skey = (f"ranked|{self._decision_skey(ranked)}"
+                    if store is not None else None)
+            if store is not None:
+                raw = store.get("coschedule", skey)
+                if raw is not None:
+                    hit = CoSchedule.from_json(raw)
+            if hit is None:
+                hit = self._search_ranked(ranked)
+                self.model.flush()
+                if store is not None:
+                    store.put("coschedule", skey, hit.to_json())
+                    store.save()
+            self._decision_cache[key] = hit
+        return hit
+
+    def _solo_schedule(self, name: str) -> CoSchedule:
+        w = self.profiles[name].active_units(self.vgpu)
+        return CoSchedule(name, None, w, 0, self.min_slice(name), 0, 0.0,
+                          self.solo_ipc(name), 0.0)
+
+    def _search_ranked(self, ranked) -> CoSchedule:
+        head = ranked[0]
+        if len(ranked) == 1:
+            return self._solo_schedule(head)
+        W = self.vgpu.units_per_sm
+        wh_max = self.profiles[head].active_units(self.vgpu)
+        # candidates in urgency order: strict `>` selection below keeps the
+        # first (most urgent) partner on CP ties. No PUR/MUR prune — the
+        # head pin already cuts the space to (n-1)*(W-1) candidates, and
+        # urgency must not lose a profitable pair to a complementarity
+        # heuristic.
+        cand = []
+        for b in ranked[1:]:
+            wb_max = self.profiles[b].active_units(self.vgpu)
+            for wh in range(1, W):
+                wb = min(W - wh, wb_max)
+                if wh > wh_max or wb < 1:
+                    continue
+                cand.append((head, wh, b, wb))
+        self._prefetch_solo(ranked)
+        self._eval_pairs(cand)
+        best, best_cp = None, -np.inf
+        for h, wh, b, wb in cand:
+            ih, ib = self.solo_ipc(h), self.solo_ipc(b)
+            c1, c2 = self._pair_cache[(h, wh, b, wb)]
+            cp = co_scheduling_profit((ih, ib), (c1, c2))
+            if cp > best_cp:
+                s1, s2 = balanced_slice_sizes(
+                    self.profiles[h], c1, self.profiles[b], c2,
+                    self.min_slice(h), self.min_slice(b),
+                    self.gpu.n_sm, w1=wh, w2=wb)
+                best = CoSchedule(h, b, wh, wb, s1, s2, cp, c1, c2)
+                best_cp = cp
+        if best is None or best.cp <= self.cp_margin:
+            return self._solo_schedule(head)
+        return best
+
     def _search(self, names) -> CoSchedule:
         if len(names) == 1:
             n = names[0]
@@ -279,9 +360,12 @@ class KerneletScheduler:
         while not kept:                       # paper: relax thresholds
             alpha_p *= 0.5
             alpha_m *= 0.5
-            kept = [(a, b) for a, b in pairs
-                    if abs(self.profiles[a].pur - self.profiles[b].pur) >= alpha_p
-                    or abs(self.profiles[a].mur - self.profiles[b].mur) >= alpha_m]
+            kept = [
+                (a, b) for a, b in pairs
+                if abs(self.profiles[a].pur - self.profiles[b].pur)
+                >= alpha_p
+                or abs(self.profiles[a].mur - self.profiles[b].mur)
+                >= alpha_m]
             if alpha_p < 1e-4:
                 kept = pairs
         W = self.vgpu.units_per_sm

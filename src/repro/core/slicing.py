@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Optional
 
 from repro.core.profiles import GPUSpec, KernelProfile
 

@@ -6,8 +6,9 @@ The ``patches``/``audio`` entries are the modality-frontend stubs required
 by the assignment (precomputed patch/frame embeddings).
 
 Also hosts the synthetic *workload* generators for arrival-timed replays
-(``poisson_arrivals`` / ``make_timed_workload``): pure numpy, so the
-engine-side consumers (benchmarks, fleet replays) never import jax.
+(``poisson_arrivals`` / ``make_timed_workload`` / ``make_skewed_workload``):
+pure numpy, so the engine-side consumers (benchmarks, fleet replays) never
+import jax.
 """
 from __future__ import annotations
 
@@ -49,6 +50,23 @@ def make_timed_workload(names, instances: int = 1000, lam: float = 1.0,
             events.append((t, n))
     events.sort()
     return [n for _, n in events], [t for t, _ in events]
+
+
+def make_skewed_workload(names, instances: int = 10, gap: float = 1.0,
+                         start: float = 0.0):
+    """Deterministic periodic stream — the adversarial case for
+    arrival-blind fleet dealing: instance i is ``names[i % len(names)]``
+    arriving at ``start + i * gap``. Round-robin dealing maps instance i
+    to GPU ``i % n_gpus``, so whenever ``len(names)`` and ``n_gpus``
+    share a factor every occurrence of a heavy kernel lands on the same
+    GPU (counts balanced, work maximally skewed); least-predicted-backlog
+    dealing spreads the heavy kernels instead. Returns ``(order,
+    arrivals)`` like ``make_timed_workload``."""
+    if instances < 0:
+        raise ValueError("instances must be >= 0")
+    order = [names[i % len(names)] for i in range(instances * len(names))]
+    arrivals = [start + i * float(gap) for i in range(len(order))]
+    return order, arrivals
 
 
 def batch_keys(cfg) -> tuple:

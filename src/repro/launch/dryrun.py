@@ -174,7 +174,6 @@ def trip_counts(cfg, shape) -> list:
         return [lvl1, 1, 1]
     inner = max(shape.seq_len // 1024, 1)          # chunked-attention blocks
     if cfg.moe is not None and shape.phase == "train":
-        from repro.launch import specs as _sp
         inner = max(inner, 8)                       # moe group scan
     return [lvl1, inner, max(shape.seq_len // 1024, 1)]
 

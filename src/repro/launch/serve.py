@@ -31,8 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core.engine import LaneSpec, WorkloadEngine
-from repro.core.markov import MarkovModel, co_scheduling_profit
+from repro.core.engine import LaneSpec, WorkloadEngine, run_fleet
+from repro.core.markov import MarkovModel
 from repro.core.profiles import TPU_V5E, KernelProfile, tpu_profile_from_costs
 from repro.core.simulator import IPCTable
 from repro.data.synthetic import make_batch, poisson_arrivals
@@ -131,14 +131,18 @@ class SharedPodServer:
 
     def plan_arrivals(self, engine: WorkloadEngine, rate: float, *,
                       seed: int = 0, slo_deadline: Optional[float] = None,
-                      rounds: int = 1500) -> dict:
+                      rounds: int = 1500,
+                      policy: str = "KERNELET") -> dict:
         """Arrival-timed drain plan: instead of assuming every pending job
         is a known backlog, jobs land on a Poisson stream at ``rate``
         (events per simulated cycle) and the engine lane admits, truncates
         and fast-forwards accordingly — predicting per-job queue wait,
         tail latency, and SLO attainment at ``slo_deadline`` in addition
         to the makespan. Like ``plan``, the replay warms the shared
-        decision cache for the real dispatcher."""
+        decision cache for the real dispatcher. ``policy`` selects the
+        planning policy — ``"EDF-KERNELET"`` plans a deadline-aware drain
+        (instance deadlines at ``arrival + slo_deadline``) and
+        ``"PWAIT-CP"`` a predicted-wait-weighted one."""
         order = [n for n, j in self.jobs.items() if j.num_slices > 0]
         if not order:
             return {"predicted_makespan_cycles": 0.0, "time_line": [],
@@ -147,7 +151,7 @@ class SharedPodServer:
             self._plan_truth = IPCTable(self.spec.virtual(), rounds=rounds,
                                         persist=False)
         arrivals = poisson_arrivals(rate, len(order), seed=seed)
-        lane = LaneSpec("KERNELET", self.profiles, order, self.spec,
+        lane = LaneSpec(policy, self.profiles, order, self.spec,
                         self._plan_truth, alpha_p=0.2, alpha_m=0.2,
                         cp_margin=0.0, arrivals=list(arrivals),
                         slo_deadline=slo_deadline)
@@ -155,24 +159,58 @@ class SharedPodServer:
         return {"predicted_makespan_cycles": float(res.total_cycles),
                 "time_line": res.time_line,
                 "n_coschedules": res.n_coschedules,
+                "policy": policy,
                 "latency": res.latency_metrics(slo_deadline),
                 "completions": res.completions}
+
+    def plan_fleet(self, n_pods: int, rate: float, *,
+                   seed: int = 0, slo_deadline: Optional[float] = None,
+                   rounds: int = 1500, policy: str = "KERNELET",
+                   deal="auto") -> dict:
+        """Fleet-dealing plan: replays the pending jobs' Poisson stream
+        over ``n_pods`` simulated pods through ``run_fleet``, dealing
+        with ``deal`` (``"auto"`` = least-predicted-backlog under
+        arrivals — see ``repro.core.engine.DealPolicy``). Returns the
+        pooled latency prediction plus the per-pod split, so capacity
+        planning can compare dealing policies before committing pods."""
+        order = [n for n, j in self.jobs.items() if j.num_slices > 0]
+        if not order:
+            return {"predicted_makespan_cycles": 0.0, "latency": {},
+                    "per_pod": [], "deal": None}
+        if self._plan_truth is None:
+            self._plan_truth = IPCTable(self.spec.virtual(), rounds=rounds,
+                                        persist=False)
+        arrivals = list(poisson_arrivals(rate, len(order), seed=seed))
+        fleet = run_fleet(policy, self.profiles, order, self.spec,
+                          self._plan_truth, n_pods, alpha_p=0.2,
+                          alpha_m=0.2, cp_margin=0.0, arrivals=arrivals,
+                          slo_deadline=slo_deadline, deal=deal)
+        return {"predicted_makespan_cycles": float(fleet.makespan),
+                "latency": fleet.latency,
+                "per_pod": [[n for n, _, _ in lane.completions]
+                            for lane in fleet.lanes],
+                "deal": fleet.deal,
+                "policy": policy}
 
     # ---- scheduling + interleaved dispatch ---- #
     def drain(self, *, max_rounds: int = 10000, plan_first: bool = True,
               arrival_rate: Optional[float] = None,
-              slo_deadline: Optional[float] = None):
+              slo_deadline: Optional[float] = None,
+              plan_policy: str = "KERNELET"):
         """Dispatch every pending job. ``arrival_rate`` switches the
         planning stage to the arrival-timed replay (``plan_arrivals``), so
         the returned plan carries predicted queue-wait/SLO metrics for the
-        drain the dispatcher is about to execute."""
+        drain the dispatcher is about to execute; ``plan_policy`` selects
+        the planning policy (e.g. ``"EDF-KERNELET"`` for a deadline-aware
+        plan)."""
         engine = WorkloadEngine()
         sched = engine.scheduler_for(self.spec, self.profiles,
                                      alpha_p=0.2, alpha_m=0.2, cp_margin=0.0)
         plan = None
         if plan_first:
             plan = (self.plan_arrivals(engine, arrival_rate,
-                                       slo_deadline=slo_deadline)
+                                       slo_deadline=slo_deadline,
+                                       policy=plan_policy)
                     if arrival_rate is not None else self.plan(engine))
         t0 = time.time()
         executed = []
@@ -229,7 +267,8 @@ def demo():
     server.submit(Job("tenantC-rwkv-prefill", "rwkv6-1.6b", "prefill", 16))
     server.submit(Job("tenantD-sc2-decode", "starcoder2-15b", "decode", 16))
     for ev in server.log:
-        print("submitted", ev[1], f"PUR={ev[2]:.2f} MUR={ev[3]:.2f} R_m={ev[4]:.2f}")
+        print("submitted", ev[1],
+              f"PUR={ev[2]:.2f} MUR={ev[3]:.2f} R_m={ev[4]:.2f}")
     res = server.drain()
     if res["plan"]:
         print(f"engine plan: predicted makespan "
@@ -237,7 +276,8 @@ def demo():
               f"{len(res['plan']['time_line'])} phases "
               f"({res['plan']['n_coschedules']} co-scheduled)")
     for k1, k2, n1, n2, cp in res["rounds"]:
-        print(f"co-schedule {k1} x {k2}: slices {n1}:{n2}  predicted CP={cp:+.3f}")
+        print(f"co-schedule {k1} x {k2}: slices {n1}:{n2}  "
+              f"predicted CP={cp:+.3f}")
     print(f"drained in {res['wall_s']:.1f}s; "
           f"mean predicted co-scheduling profit {res['predicted_gain']:+.1%}")
 

@@ -5,8 +5,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-
 from repro.data.synthetic import VLM_PATCHES
 from repro.models import sharding as SH
 from repro.models import transformer as T

@@ -1,10 +1,8 @@
 """Step functions (train / serve) shared by the trainer, server and dry-run."""
 from __future__ import annotations
 
-import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import transformer as T
 from repro.optim import adamw

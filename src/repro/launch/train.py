@@ -14,9 +14,7 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.checkpoint import store
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.data.synthetic import SyntheticLoader
 from repro.launch.mesh import make_host_mesh

@@ -13,8 +13,6 @@ all-reduce on the contraction).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -292,7 +290,6 @@ def mla_forward(x, p, cfg, positions, *, causal=True, cache=None, t=None):
     """
     m = cfg.mla
     b, s, d = x.shape
-    h = cfg.num_heads
     dn, dr, dv = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim
 
     # --- queries ---

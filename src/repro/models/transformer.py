@@ -10,8 +10,6 @@ which is what keeps 61-layer × 512-way-GSPMD compiles tractable).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -251,7 +249,7 @@ def apply_block(x, bp, cfg, sig, positions, *, enc_out=None, cache=None,
         if cache is not None:
             new_cache["x_last_c"] = x_last_c
     elif is_moe:
-        from repro.models.sharding import current_layout, current_mesh, dp_axes
+        from repro.models.sharding import current_layout, current_mesh
         mesh = current_mesh()
         use_ep = (cfg.moe_impl == "ep" and mesh is not None
                   and current_layout() == "2d"
@@ -373,7 +371,6 @@ def encode(params, cfg, audio):
     x = audio.astype(jnp.dtype(cfg.dtype)) + enc["pos_embed"][None]
     x = constrain(x, "dp", None, None)
     pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
-    st = Stage((("attn", False),), cfg.encoder_layers, 0)
 
     def body(carry, layer_ps):
         xx = carry

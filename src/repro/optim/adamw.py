@@ -8,11 +8,9 @@ shardings apply verbatim to the moments (ZeRO-1 falls out of GSPMD).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

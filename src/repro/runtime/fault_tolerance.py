@@ -14,7 +14,6 @@ Three mechanisms, all exercised by tests with injected failures:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional
 
 import numpy as np

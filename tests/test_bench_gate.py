@@ -1,0 +1,129 @@
+"""Perf-regression-gate tier (``benchmarks/perf_gate.py``): the gate's
+compare logic, its best-of-N noise handling, the self-test that CI runs
+before the real gate, and the per-generation history validation that the
+arrival-latency schema grew this PR.
+
+Pure logic — no wall-clock probes — so the tier is deterministic and
+costs milliseconds. The gate's *measurement* path is exercised by
+``make bench-gate`` / the CI ``bench-smoke`` job instead.
+"""
+import json
+
+import pytest
+
+from benchmarks import history_schema
+from benchmarks.perf_gate import gate_lane, regressed, run_gate, self_test
+
+
+# ------------------------------------------------------------------ #
+# compare logic
+# ------------------------------------------------------------------ #
+def test_regressed_lower_is_better():
+    assert not regressed(100.0, 100.0, "lower", 0.25)
+    assert not regressed(124.9, 100.0, "lower", 0.25)
+    assert regressed(125.1, 100.0, "lower", 0.25)
+    assert regressed(200.0, 100.0, "lower", 0.25)     # the 2x self-test
+    assert not regressed(50.0, 100.0, "lower", 0.25)  # faster never fails
+
+
+def test_regressed_higher_is_better():
+    assert not regressed(100.0, 100.0, "higher", 0.25)
+    assert not regressed(80.1, 100.0, "higher", 0.25)
+    assert regressed(79.9, 100.0, "higher", 0.25)
+    assert regressed(50.0, 100.0, "higher", 0.25)     # the 2x self-test
+    assert not regressed(200.0, 100.0, "higher", 0.25)
+
+
+def test_regressed_edge_cases():
+    assert not regressed(1.0, 0.0, "lower", 0.25)     # no baseline signal
+    with pytest.raises(ValueError):
+        regressed(1.0, 1.0, "sideways", 0.25)
+
+
+# ------------------------------------------------------------------ #
+# gate_lane against a synthetic history
+# ------------------------------------------------------------------ #
+def _history(tmp_path, value):
+    path = tmp_path / "hist.jsonl"
+    path.write_text(json.dumps({"metric": value,
+                                "recorded_at": "2026-01-01T00:00:00Z"})
+                    + "\n")
+    return str(path)
+
+
+def test_gate_lane_passes_and_fails(tmp_path):
+    path = _history(tmp_path, 100.0)
+    ok = gate_lane("lane", path, "metric", "lower", lambda: 90.0,
+                   tolerance=0.25, attempts=1)
+    assert ok["ok"] and ok["baseline"] == 100.0 and ok["fresh"] == 90.0
+    bad = gate_lane("lane", path, "metric", "lower", lambda: 300.0,
+                    tolerance=0.25, attempts=1)
+    assert not bad["ok"] and bad["ratio"] == 3.0
+
+
+def test_gate_lane_best_of_n_filters_noise(tmp_path):
+    """One noisy probe must not fail the gate: the lane keeps probing (up
+    to ``attempts``) and gates on the best value, so only a *persistent*
+    regression fails."""
+    path = _history(tmp_path, 100.0)
+    values = iter([400.0, 350.0, 95.0])   # two spikes, then truth
+    row = gate_lane("lane", path, "metric", "lower",
+                    lambda: next(values), tolerance=0.25, attempts=3)
+    assert row["ok"] and row["fresh"] == 95.0 and len(row["probes"]) == 3
+    values = iter([400.0, 350.0, 320.0])  # persistently slow
+    row = gate_lane("lane", path, "metric", "lower",
+                    lambda: next(values), tolerance=0.25, attempts=3)
+    assert not row["ok"] and row["fresh"] == 320.0
+
+
+def test_gate_lane_no_baseline_passes_vacuously(tmp_path):
+    row = gate_lane("lane", str(tmp_path / "missing.jsonl"), "metric",
+                    "lower", lambda: 1e9, tolerance=0.25, attempts=1)
+    assert row["ok"] and row["baseline"] is None and "note" in row
+
+
+# ------------------------------------------------------------------ #
+# the self-test CI runs: injected 2x slowdown must fail every lane
+# ------------------------------------------------------------------ #
+def test_injected_slowdown_fails_and_selftest_passes():
+    """Against the real tracked histories: a synthetic 2x slowdown fails
+    every lane (no probes run — values are injected), and the packaged
+    self-test reports success (exit code 0)."""
+    slow = run_gate(tolerance=0.25, attempts=1, inject_factor=2.0)
+    assert not slow["ok"]
+    assert all(not r["ok"] for r in slow["lanes"]
+               if r["baseline"] is not None)
+    flat = run_gate(tolerance=0.25, attempts=1, inject_factor=1.0)
+    assert flat["ok"]
+    assert self_test(tolerance=0.25) == 0
+
+
+# ------------------------------------------------------------------ #
+# per-generation history validation (the schema that grew this PR)
+# ------------------------------------------------------------------ #
+def test_validate_history_per_generation(tmp_path):
+    path = tmp_path / "h.jsonl"
+    old = {"base": 1, "policies": ["A"], "A_x": 1.0,
+           "recorded_at": "t"}
+    new = {"base": 1, "policies": ["A", "B"], "A_x": 1.0, "B_x": 2.0,
+           "recorded_at": "t"}
+    path.write_text(json.dumps(old) + "\n" + json.dumps(new) + "\n")
+
+    def extra(e):
+        return [f"{p}_x" for p in e.get("policies", ())]
+
+    assert history_schema.validate_history(str(path), ("base",),
+                                           extra) == 2
+    # a new-generation line missing its own generation's field fails
+    broken = dict(new)
+    del broken["B_x"]
+    path.write_text(json.dumps(old) + "\n" + json.dumps(broken) + "\n")
+    with pytest.raises(ValueError, match="B_x"):
+        history_schema.validate_history(str(path), ("base",), extra)
+
+
+def test_arrival_latency_history_validates():
+    """The real tracked file: both the pre-EDF and the EDF-generation
+    lines must satisfy their own generations' schemas."""
+    from benchmarks import arrival_latency
+    assert arrival_latency.validate_history() >= 2

@@ -11,7 +11,7 @@ import pytest
 
 from repro.core import markov
 from repro.core.calibrate import calibrated_benchmarks
-from repro.core.ipc_cache import ArtifactStore, IPCCache
+from repro.core.ipc_cache import ArtifactStore
 from repro.core.profiles import C2050, KernelProfile
 from repro.core.simulator import IPCTable
 

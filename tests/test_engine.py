@@ -10,10 +10,8 @@ over all four policies, mixed batches, sharded sweeps, and fleets.
 Also hosts the persistent-decision-cache and artifact-store GC tests (the
 engine is their primary consumer).
 """
-import json
 import os
 
-import numpy as np
 import pytest
 
 from repro.core import markov
@@ -24,8 +22,8 @@ from repro.core.queue import (_Pending, make_workload, run_policy,
                               run_policy_reference)
 from repro.core.scheduler import (DECISION_SCHEMA, DECISION_STORE_SCHEMA,
                                   KerneletScheduler, _decision_store_at)
-from repro.core.simulator import IPCTable, simulate_many, \
-    simulate_many_sharded
+from repro.core.simulator import (IPCTable, simulate_many,
+                                  simulate_many_sharded)
 
 GPU = C2050
 VG = GPU.virtual()
@@ -210,6 +208,91 @@ def test_fleet_golden_pin(no_persist, profiles, policy):
 def test_fleet_rejects_empty(profiles, truth):
     with pytest.raises(ValueError):
         run_fleet("OPT", profiles, [], GPU, truth, 0)
+
+
+# ------------------------------------------------------------------ #
+# fleet dealing: DealPolicy plumbing + least-backlog golden pin
+# ------------------------------------------------------------------ #
+# Least-backlog fleet pin on the adversarial skewed stream (heavy MA and
+# light CB alternating every 40k cycles over 2 GPUs): round-robin would
+# pin every MA to GPU 0; least-predicted-backlog interleaves. Pinned like
+# FLEET_GOLDEN/FLEET_GOLDEN_TRACE — totals at 1e-9 rel (KERNELET's
+# Markov-backed decisions), decision-event traces with ``==``.
+# Regenerate via this file's ``__main__`` helper after an *intentional*
+# dealing or policy change.
+LB_FLEET_GOLDEN = (474817.46031746035, 5, 23.73809523809524)
+LB_FLEET_GOLDEN_TRACE = (
+    ("solo:MA", "co:CB+MA@2:2", "co:CB+MA@2:2", "solo:MA",
+     "co:CB+MA@2:2", "solo:MA"),
+    ("idle", "solo:CB", "idle", "solo:MA", "co:CB+MA@2:2",
+     "co:CB+MA@2:2", "solo:MA"),
+)
+
+
+def _skewed_stream():
+    from repro.data.synthetic import make_skewed_workload
+    return make_skewed_workload(["MA", "CB"], instances=4, gap=4e4)
+
+
+def test_least_backlog_fleet_golden_pin(no_persist, profiles):
+    truth = IPCTable(VG, rounds=ROUNDS, persist=False)
+    order, arrivals = _skewed_stream()
+    fleet = run_fleet("KERNELET", profiles, order, GPU, truth, 2,
+                      cp_margin=0.0, arrivals=arrivals, slo_deadline=2e6,
+                      deal="least_backlog")
+    makespan, n_cos, n_slices = LB_FLEET_GOLDEN
+    assert fleet.deal == "least_backlog"
+    assert fleet.makespan == pytest.approx(makespan, rel=1e-9)
+    assert fleet.n_coschedules == n_cos
+    assert fleet.n_slices == pytest.approx(n_slices, rel=1e-9)
+    assert tuple(tuple(ev for _, ev in lane.time_line)
+                 for lane in fleet.lanes) == LB_FLEET_GOLDEN_TRACE
+    # the deal spreads the heavy kernel: both GPUs serve MA *and* CB
+    for lane in fleet.lanes:
+        assert {n for n, _, _ in lane.completions} == {"MA", "CB"}
+
+
+def test_least_backlog_beats_round_robin_on_skew(no_persist, profiles):
+    """The load-aware deal's contract on the adversarial stream: strictly
+    better pooled p95 wait and makespan than arrival-blind round-robin
+    (which sends every heavy instance to GPU 0)."""
+    order, arrivals = _skewed_stream()
+    fleets = {}
+    for deal in ("round_robin", "least_backlog"):
+        truth = IPCTable(VG, rounds=ROUNDS, persist=False)
+        fleets[deal] = run_fleet("KERNELET", profiles, order, GPU, truth,
+                                 2, cp_margin=0.0, arrivals=arrivals,
+                                 slo_deadline=2e6, deal=deal)
+    rr, lb = fleets["round_robin"], fleets["least_backlog"]
+    assert {n for n, _, _ in rr.lanes[0].completions} == {"MA"}
+    assert lb.latency["wait_p95"] < rr.latency["wait_p95"]
+    assert lb.makespan < rr.makespan
+
+
+def test_deal_policy_resolution_and_round_robin_split(profiles, truth,
+                                                      no_persist):
+    """``auto`` deals round-robin in backlog mode (bit-compat with the
+    pre-DealPolicy ``order[g::n]`` split — what keeps FLEET_GOLDEN
+    valid) and least-backlog under arrivals; unknown names fail loudly;
+    RoundRobinDeal.assign is exactly ``i % n``."""
+    from repro.core.engine import (LeastBacklogDeal, RoundRobinDeal,
+                                   resolve_deal)
+    assert resolve_deal("auto", None).name == "round_robin"
+    assert resolve_deal("auto", [0.0]).name == "least_backlog"
+    assert resolve_deal(LeastBacklogDeal(), None).name == "least_backlog"
+    with pytest.raises(ValueError):
+        resolve_deal("nope", None)
+    order = order_for(profiles, instances=6)
+    assign = RoundRobinDeal().assign(order, None, 3, profiles=profiles,
+                                     gpu=GPU)
+    assert assign == [i % 3 for i in range(len(order))]
+    for g in range(3):
+        assert [order[i] for i, a in enumerate(assign) if a == g] == \
+            order[g::3]
+    # backlog-mode fleets keep the legacy split regardless of the deal
+    # machinery (the FLEET_GOLDEN contract)
+    fleet = run_fleet("OPT", profiles, order, GPU, truth, 3)
+    assert fleet.deal == "round_robin"
 
 
 # ------------------------------------------------------------------ #
@@ -405,3 +488,16 @@ if __name__ == "__main__":       # fleet pin regeneration helper
             print(f"        {lane_tr!r},")
         print("    ),")
     print("}")
+    from repro.data.synthetic import make_skewed_workload
+    order, arrivals = make_skewed_workload(["MA", "CB"], instances=4,
+                                           gap=4e4)
+    fleet = run_fleet("KERNELET", profs, order, GPU,
+                      IPCTable(VG, rounds=ROUNDS, persist=False), 2,
+                      cp_margin=0.0, arrivals=arrivals, slo_deadline=2e6,
+                      deal="least_backlog")
+    print(f"LB_FLEET_GOLDEN = ({fleet.makespan!r}, "
+          f"{fleet.n_coschedules}, {fleet.n_slices!r})")
+    print("LB_FLEET_GOLDEN_TRACE = (")
+    for lane in fleet.lanes:
+        print(f"    {tuple(ev for _, ev in lane.time_line)!r},")
+    print(")")

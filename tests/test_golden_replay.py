@@ -11,7 +11,6 @@ accounting) shifts totals by many orders of magnitude more and fails
 loudly. Regenerate pins by running this file's ``python -m`` entry after an
 *intentional* change.
 """
-import numpy as np
 import pytest
 
 from repro.core.calibrate import calibrated_benchmarks

@@ -8,8 +8,8 @@ pytest.importorskip("hypothesis")           # degrade gracefully without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import slicing
-from repro.core.markov import MarkovModel, balanced_slice_sizes, \
-    co_scheduling_profit
+from repro.core.markov import (MarkovModel, balanced_slice_sizes,
+                               co_scheduling_profit)
 from repro.core.profiles import C2050, KernelProfile
 from repro.kernels.coschedule import make_schedule
 from repro.optim import adamw

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import store
-from repro.data.synthetic import SyntheticLoader, make_batch
+from repro.data.synthetic import SyntheticLoader
 from repro.optim import adamw
 from repro.runtime.fault_tolerance import (HostFailure, ResilientLoop,
                                            StragglerBalancer,
@@ -117,7 +117,6 @@ def test_resilient_loop_gives_up(tmp_path):
 
 def test_straggler_balancer_rebalances():
     bal = StragglerBalancer(n_hosts=4, total_slices=64)
-    m0 = bal.makespan()
     for _ in range(20):
         for h, lat in enumerate((1.0, 1.0, 1.0, 3.0)):   # host 3 is slow
             bal.observe(h, lat)

@@ -13,8 +13,8 @@ pytest.importorskip("hypothesis")           # degrade gracefully without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.profiles import C2050, KernelProfile
-from repro.core.queue import _Pending, _coexec_phase, make_workload, \
-    run_policy
+from repro.core.queue import (_Pending, _coexec_phase, make_workload,
+                              run_policy)
 from repro.core.simulator import (IPCTable, simulate_many,
                                   simulate_reference)
 from repro.data.synthetic import make_timed_workload
