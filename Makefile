@@ -22,6 +22,7 @@ bench-smoke:
 	$(PYTHON) -m benchmarks.decision_latency --smoke
 	$(PYTHON) -m benchmarks.replay_throughput --smoke
 	$(PYTHON) -m benchmarks.arrival_latency --smoke
+	$(PYTHON) -m benchmarks.daemon_recovery --smoke
 	$(MAKE) bench-gate
 
 # perf-regression gate: self-test (an injected 2x slowdown must fail),

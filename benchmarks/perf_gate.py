@@ -16,6 +16,10 @@ baseline would (the history's own consecutive same-box entries swing by
   * ``replay_throughput`` / ``lanes_per_s`` (higher is better) — warm
     engine replay throughput at the tracked sweep configuration
     (16 lanes, 40 instances, 2500 rounds).
+  * ``daemon_recovery`` / ``sqlite_speedup`` (higher is better) — the
+    incremental-SQLite-vs-JSON-rewrite store-write advantage at the
+    1k-entry size; a ratio of two same-box timings, so it is robust to
+    machine changes in a way the absolute-time lanes are not.
 
 A lane fails when it is more than ``tolerance`` (default 25%,
 ``REPRO_BENCH_GATE_TOL``) worse than the baseline. Wall-clock probes are
@@ -45,7 +49,7 @@ import os
 import statistics
 import sys
 
-from benchmarks import decision_latency, replay_throughput
+from benchmarks import daemon_recovery, decision_latency, replay_throughput
 
 REPORT_PATH = os.path.join("artifacts", "bench", "perf_gate.json")
 
@@ -90,12 +94,18 @@ def _probe_replay() -> float:
         lanes=16, instances=40, rounds=2500)["lanes_per_s"])
 
 
+def _probe_sqlite_speedup() -> float:
+    return float(daemon_recovery.bench_store_writes()["sqlite_speedup"])
+
+
 # (lane name, history path, metric, better, probe)
 LANES = (
     ("decision_latency", decision_latency.HISTORY_PATH,
      "startup_warm_us", "lower", _probe_startup),
     ("replay_throughput", replay_throughput.HISTORY_PATH,
      "lanes_per_s", "higher", _probe_replay),
+    ("daemon_recovery", daemon_recovery.HISTORY_PATH,
+     "sqlite_speedup", "higher", _probe_sqlite_speedup),
 )
 
 

@@ -27,14 +27,16 @@ def main() -> None:
     os.makedirs(args.out, exist_ok=True)
 
     from benchmarks.paper_figs import ALL_FIGS
-    from benchmarks import (arrival_latency, decision_latency,
-                            replay_throughput, tpu_coschedule)
+    from benchmarks import (arrival_latency, daemon_recovery,
+                            decision_latency, replay_throughput,
+                            tpu_coschedule)
 
     benches = dict(ALL_FIGS)
     benches["tpu_coschedule"] = tpu_coschedule.bench
     benches["decision_latency"] = decision_latency.bench
     benches["replay_throughput"] = replay_throughput.bench
     benches["arrival_latency"] = arrival_latency.bench
+    benches["daemon_recovery"] = daemon_recovery.bench
     if args.only:
         benches = {k: v for k, v in benches.items() if k == args.only}
 
@@ -51,6 +53,8 @@ def main() -> None:
             rec = fn(lanes=8, instances=10, rounds=600)
         elif args.fast and name == "arrival_latency":
             rec = fn(instances=4, rounds=500)
+        elif args.fast and name == "daemon_recovery":
+            rec = fn(rounds=300)
         else:
             rec = fn()
         dt = time.time() - t0
@@ -64,6 +68,8 @@ def main() -> None:
                 replay_throughput.record_history(rec)
             elif name == "arrival_latency":
                 arrival_latency.record_history(rec)
+            elif name == "daemon_recovery":
+                daemon_recovery.record_history(rec)
         print(f"{name},{dt * 1e6:.0f},{_headline_str(rec)}")
 
 

@@ -44,7 +44,7 @@ def _profile_store(gpu: GPUSpec):
     base = ipc_cache.cache_dir()
     if base is None:
         return None
-    return ipc_cache.ArtifactStore(
+    return ipc_cache.open_store(
         f"calib_{content_digest(gpu)}", ("profiles",),
         schema=CALIB_STORE_SCHEMA, dirname=base)
 

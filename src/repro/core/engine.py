@@ -150,6 +150,13 @@ class _Lane:
         self.n_cos = 0
         self.n_slices = 0.0
         self.log: list = []
+        # controller-set drain ceiling (daemon preempt/pause/cancel): the
+        # charge pass truncates phases so the lane clock never passes it —
+        # the PR 4 arrival-truncation cap reused as the preemption point.
+        # inf (default) leaves every phase untouched, bit-identically. The
+        # controller must park a lane once ``total >= cap_at``: the engine
+        # itself would keep stepping it with zero-length phases.
+        self.cap_at = np.inf
         # one generator for the whole lane (MC only): re-seeding per
         # iteration would make MC draw the identical pair/split forever
         self.rng = ((spec.mc_rng if spec.mc_rng is not None
@@ -163,6 +170,34 @@ class _Lane:
         return WorkloadResult(self.spec.policy, self.total, self.n_cos,
                               self.n_slices, self.log,
                               completions=self.pend.completions)
+
+    # ---- checkpoint serialization (daemon phase-boundary snapshots) ---- #
+    def state_json(self) -> dict:
+        """Everything mutable as JSON-safe types: progress counters, event
+        log, the full ``_Pending`` ledger, and (MC lanes) the exact RNG
+        state — restoring replays the identical IEEE-754 sequence, which
+        is what makes kill/restart bit-identical to an uninterrupted run.
+        ``spec``/``sched``/``cap_at`` are code- or controller-side and are
+        rebuilt by the restorer, not checkpointed."""
+        st = {
+            "total": float(self.total),
+            "n_cos": int(self.n_cos),
+            "n_slices": float(self.n_slices),
+            "log": [[float(t), e] for t, e in self.log],
+            "pend": self.pend.to_json(),
+        }
+        if self.rng is not None:
+            st["rng"] = self.rng.bit_generator.state
+        return st
+
+    def load_state(self, st: dict) -> None:
+        self.total = float(st["total"])
+        self.n_cos = int(st["n_cos"])
+        self.n_slices = float(st["n_slices"])
+        self.log = [(float(t), str(e)) for t, e in st["log"]]
+        self.pend = _Pending.from_json(self.spec.profiles, st["pend"])
+        if self.rng is not None and "rng" in st:
+            self.rng.bit_generator.state = st["rng"]
 
 
 # one decision per lane per step; co-exec and solo phases are charged in
@@ -444,64 +479,85 @@ class WorkloadEngine:
         return t + n_sl * lo, n_sl, d
 
     # ---- main loop ---- #
+    def start(self, specs: Sequence[LaneSpec]) -> List[_Lane]:
+        """Materialize lanes without draining them — the incremental
+        entry point for controllers (the serving daemon) that advance
+        lanes with ``step`` and checkpoint between phases."""
+        lanes = [_Lane(s, self._lane_scheduler(s)) for s in specs]
+        self.stats["lanes"] += len(lanes)
+        return lanes
+
+    def step(self, active: Sequence[_Lane]) -> List[_Lane]:
+        """Advance every lane in ``active`` by exactly one decision/charge
+        phase; returns the still-live subset. After a step, every lane is
+        at a phase boundary — the only points where lane state is
+        checkpointable (``_Lane.state_json``) and where a finite
+        ``cap_at`` parks a lane for preempt/cancel.
+
+        Each step first admits everything that has landed by each lane's
+        clock (fast-forwarding idle lanes to their next arrival), then
+        decides/charges with per-lane phase caps at the next arrival (and
+        the controller's ``cap_at``), then resolves completions."""
+        active = list(active)
+        if not active:
+            return []
+        self.stats["steps"] += 1
+        # -- arrival events: admission + idle fast-forward -- #
+        for ln in active:
+            self.stats["admitted"] += ln.pend.admit_until(ln.total)
+            if not ln.pend.active():
+                # idle until the next arrival: advance the lane clock
+                nxt = ln.pend.next_arrival()
+                ln.total = max(ln.total, nxt)
+                ln.log.append((ln.total, "idle"))
+                self.stats["idle_ffwd"] += 1
+                self.stats["admitted"] += ln.pend.admit_until(ln.total)
+        actions = [self._decide(ln) for ln in active]
+        for a in actions:
+            nxt = a.lane.pend.next_arrival()
+            if nxt is not None:
+                a.cap = nxt - a.lane.total    # > 0: nxt was unadmitted
+            if np.isfinite(a.lane.cap_at):
+                # controller ceiling (preempt/pause): never negative, so a
+                # stale cap_at cannot roll a lane clock backwards
+                a.cap = min(a.cap, max(a.lane.cap_at - a.lane.total, 0.0))
+        self._resolve_lookups(actions)
+        co = [a for a in actions if a.kind == "co"]
+        solo = [a for a in actions if a.kind == "solo"]
+        if co:
+            t, d1, d2, sl = self._charge_co(co)
+            for j, a in enumerate(co):
+                ln = a.lane
+                ln.pend.begin_phase(ln.total)
+                ln.pend.drain(a.n1, d1[j])
+                ln.pend.drain(a.n2, d2[j])
+                ln.total = ln.total + t[j]
+                if a.count:
+                    ln.n_cos += 1
+                    ln.n_slices = ln.n_slices + sl[j]
+                ln.log.append((ln.total, a.event))
+                ln.pend.pop_completed(ln.total)
+        if solo:
+            t, n_sl, d = self._charge_solo(solo)
+            for j, a in enumerate(solo):
+                ln = a.lane
+                ln.pend.begin_phase(ln.total)
+                ln.pend.drain(a.n1, d[j])
+                ln.total = ln.total + t[j]
+                if a.count:
+                    ln.n_slices = ln.n_slices + n_sl[j]
+                ln.log.append((ln.total, a.event))
+                ln.pend.pop_completed(ln.total)
+        return [ln for ln in active if ln.live()]
+
     def run(self, specs: Sequence[LaneSpec]) -> List[WorkloadResult]:
         """Drain every lane; returns one ``WorkloadResult`` per spec, in
         order — each bit-identical to ``run_policy_reference`` on the same
-        configuration (arrival-timed lanes: on the t=0 schedule).
-
-        Arrival handling is batched across lanes within the normal step
-        loop: each step first admits everything that has landed by each
-        lane's clock (fast-forwarding idle lanes to their next arrival),
-        then decides/charges as usual with per-lane phase caps at the next
-        arrival, then resolves per-instance completions."""
-        lanes = [_Lane(s, self._lane_scheduler(s)) for s in specs]
-        self.stats["lanes"] += len(lanes)
+        configuration (arrival-timed lanes: on the t=0 schedule)."""
+        lanes = self.start(specs)
         active = [ln for ln in lanes if ln.live()]
         while active:
-            self.stats["steps"] += 1
-            # -- arrival events: admission + idle fast-forward -- #
-            for ln in active:
-                self.stats["admitted"] += ln.pend.admit_until(ln.total)
-                if not ln.pend.active():
-                    # idle until the next arrival: advance the lane clock
-                    nxt = ln.pend.next_arrival()
-                    ln.total = max(ln.total, nxt)
-                    ln.log.append((ln.total, "idle"))
-                    self.stats["idle_ffwd"] += 1
-                    self.stats["admitted"] += ln.pend.admit_until(ln.total)
-            actions = [self._decide(ln) for ln in active]
-            for a in actions:
-                nxt = a.lane.pend.next_arrival()
-                if nxt is not None:
-                    a.cap = nxt - a.lane.total    # > 0: nxt was unadmitted
-            self._resolve_lookups(actions)
-            co = [a for a in actions if a.kind == "co"]
-            solo = [a for a in actions if a.kind == "solo"]
-            if co:
-                t, d1, d2, sl = self._charge_co(co)
-                for j, a in enumerate(co):
-                    ln = a.lane
-                    ln.pend.begin_phase(ln.total)
-                    ln.pend.drain(a.n1, d1[j])
-                    ln.pend.drain(a.n2, d2[j])
-                    ln.total = ln.total + t[j]
-                    if a.count:
-                        ln.n_cos += 1
-                        ln.n_slices = ln.n_slices + sl[j]
-                    ln.log.append((ln.total, a.event))
-                    ln.pend.pop_completed(ln.total)
-            if solo:
-                t, n_sl, d = self._charge_solo(solo)
-                for j, a in enumerate(solo):
-                    ln = a.lane
-                    ln.pend.begin_phase(ln.total)
-                    ln.pend.drain(a.n1, d[j])
-                    ln.total = ln.total + t[j]
-                    if a.count:
-                        ln.n_slices = ln.n_slices + n_sl[j]
-                    ln.log.append((ln.total, a.event))
-                    ln.pend.pop_completed(ln.total)
-            active = [ln for ln in active if ln.live()]
+            active = self.step(active)
         return [ln.result() for ln in lanes]
 
 

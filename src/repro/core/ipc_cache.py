@@ -29,6 +29,21 @@ Layout:  <cache_dir>/<name>_v<schema>.json
 directory and is overridable via the ``REPRO_IPC_CACHE`` environment
 variable; setting it to ``0``, ``off``, or ``none`` disables persistence
 entirely (in-memory caching still applies).
+
+Two on-disk backends implement the same store contract:
+
+  * **json** (default) — one whole file per (name, schema), rewritten
+    atomically on every save (tmp file + fsync + ``os.replace``, so a
+    crash mid-save can never tear the file). Simple and diffable, but a
+    save costs O(total entries) — the known hot-table rewrite.
+  * **sqlite** (``REPRO_STORE_BACKEND=sqlite``) — one SQLite file per
+    (name, schema), saves upsert only the entries written since the last
+    save: O(dirty), which is what the serving daemon's eager
+    save-per-decision loop needs. See ``repro.core.jobstore``.
+
+``open_store`` / ``open_ipc_cache`` are the backend-dispatching
+constructors; every store family (ipc / markov / calib / decisions) goes
+through them.
 """
 from __future__ import annotations
 
@@ -38,9 +53,15 @@ import re
 import tempfile
 from typing import Dict, List, Optional, Sequence
 
+try:                                     # posix advisory locks; best-effort
+    import fcntl
+except ImportError:                      # pragma: no cover - non-posix
+    fcntl = None
+
 from repro.core.profiles import GPUSpec, content_digest
 
 ENV_VAR = "REPRO_IPC_CACHE"
+ENV_BACKEND = "REPRO_STORE_BACKEND"
 DEFAULT_DIR = os.path.join("artifacts", "ipc_cache")
 
 # bump when simulator physics change in a way that alters measurements
@@ -55,6 +76,42 @@ def cache_dir() -> Optional[str]:
     if path.strip().lower() in ("", "0", "off", "none", "disable"):
         return None
     return path
+
+
+def store_backend() -> str:
+    """Selected artifact-store backend: ``json`` (default) or ``sqlite``
+    (``REPRO_STORE_BACKEND``). Unknown values fall back to json — the
+    store is an optimization layer and must never refuse to start."""
+    raw = os.environ.get(ENV_BACKEND, "json").strip().lower()
+    return raw if raw in ("json", "sqlite") else "json"
+
+
+def open_store(name: str, kinds: Sequence[str], schema: int = 1,
+               path: Optional[str] = None,
+               dirname: Optional[str] = None,
+               backend: Optional[str] = None) -> "ArtifactStore":
+    """Backend-dispatching store constructor (the one producers use):
+    returns an ``ArtifactStore`` (json) or ``SqliteArtifactStore``
+    depending on ``backend`` / ``REPRO_STORE_BACKEND``."""
+    backend = backend if backend is not None else store_backend()
+    if backend == "sqlite":
+        from repro.core.jobstore import SqliteArtifactStore
+        return SqliteArtifactStore(name, kinds, schema=schema, path=path,
+                                   dirname=dirname)
+    return ArtifactStore(name, kinds, schema=schema, path=path,
+                         dirname=dirname)
+
+
+def open_ipc_cache(gpu: GPUSpec, seed: int, rounds: int,
+                   path: Optional[str] = None,
+                   backend: Optional[str] = None) -> "IPCCache":
+    """Backend-dispatching ``IPCCache`` constructor (what ``IPCTable``
+    uses for its persistent layer)."""
+    backend = backend if backend is not None else store_backend()
+    if backend == "sqlite":
+        from repro.core.jobstore import SqliteIPCCache
+        return SqliteIPCCache(gpu, seed, rounds, path=path)
+    return IPCCache(gpu, seed, rounds, path=path)
 
 
 def _entry_key(prof_ws) -> str:
@@ -135,21 +192,36 @@ class ArtifactStore:
     def save(self) -> None:
         if self.path is None or not self._dirty:
             return
-        # merge with whatever a concurrent process wrote since our load:
-        # entries are content-addressed, so union is always valid
-        on_disk = self._load()
-        for kind in self._kinds:
-            merged = dict(on_disk[kind])
-            merged.update(self._data[kind])
-            self._data[kind] = merged
         tmp = None
+        lock = None
         try:
             os.makedirs(os.path.dirname(self.path), exist_ok=True)
+            # serialize the read-merge-replace against concurrent savers:
+            # without the lock, two processes can both load, each merge
+            # only its own entries, and the second replace drops the
+            # first's write (the fsync below widens that window enough to
+            # hit in practice)
+            lock = self._acquire_lock()
+            # merge with whatever a concurrent process wrote since our
+            # load: entries are content-addressed, so union is always valid
+            on_disk = self._load()
+            for kind in self._kinds:
+                merged = dict(on_disk[kind])
+                merged.update(self._data[kind])
+                self._data[kind] = merged
             fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path),
                                        suffix=".tmp")
+            # crash-atomic: the payload is fully durable in the temp file
+            # *before* the rename swaps it in, so a SIGKILL (or power cut)
+            # at any point leaves either the old complete file or the new
+            # complete file — never a torn one
             with os.fdopen(fd, "w") as f:
                 json.dump(self._encode(self._data), f)
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, self.path)
+            tmp = None
+            self._fsync_dir(os.path.dirname(self.path))
             self._dirty = False          # only a successful write settles it
         except OSError:
             # unwritable cache location: degrade to in-memory only (still
@@ -160,14 +232,82 @@ class ArtifactStore:
                     os.unlink(tmp)
                 except OSError:
                     pass
+        finally:
+            self._release_lock(lock)
+
+    def _acquire_lock(self):
+        """Blocking exclusive advisory lock on a dot-prefixed sidecar
+        (``.<file>.lock``) next to the store file; None when locking is
+        unavailable (non-posix, unwritable dir) — save proceeds unlocked,
+        which is the historical best-effort behavior.
+
+        The sidecar is unlinked on release so cache directories hold only
+        store files; unlink + flock is racy in general, so acquisition
+        re-checks after locking that the fd still names the on-disk file
+        (a holder that unlinked it hands waiters a dead inode — they
+        retry on the fresh path)."""
+        if fcntl is None or self.path is None:
+            return None
+        d, fname = os.path.split(self.path)
+        lock_path = os.path.join(d, f".{fname}.lock")
+        while True:
+            try:
+                fd = os.open(lock_path, os.O_CREAT | os.O_RDWR, 0o644)
+                fcntl.flock(fd, fcntl.LOCK_EX)
+            except OSError:
+                try:
+                    os.close(fd)
+                except (OSError, UnboundLocalError):
+                    pass
+                return None
+            try:
+                if os.fstat(fd).st_ino == os.stat(lock_path).st_ino:
+                    return (fd, lock_path)
+            except OSError:
+                pass                     # unlinked under us: retry
+            os.close(fd)
+
+    @staticmethod
+    def _release_lock(lock) -> None:
+        if lock is None:
+            return
+        fd, lock_path = lock
+        try:
+            # unlink while still holding the lock: blocked waiters wake
+            # on a dead inode, notice, and re-acquire on the fresh path
+            os.unlink(lock_path)
+        except OSError:
+            pass
+        try:
+            fcntl.flock(fd, fcntl.LOCK_UN)
+        except OSError:
+            pass
+        finally:
+            os.close(fd)
+
+    @staticmethod
+    def _fsync_dir(dirname: str) -> None:
+        """Best-effort directory fsync so the rename itself is durable on
+        power loss (not required for mere process kills)."""
+        try:
+            fd = os.open(dirname, os.O_RDONLY)
+        except OSError:
+            return
+        try:
+            os.fsync(fd)
+        except OSError:
+            pass
+        finally:
+            os.close(fd)
 
 
     # ---- garbage collection ---- #
     # every store file carries its schema version in the file name:
-    # keyed stores as ``<name>_v<schema>.json``, the historical flat IPC
-    # layout as ``ipc_v<schema>_<identity>.json`` — so dead generations can
-    # be collected from the names alone, without parsing payloads
-    _FILE_RE = re.compile(r"_v(\d+)(?:_|\.json$)")
+    # keyed stores as ``<name>_v<schema>.json`` / ``.sqlite``, the
+    # historical flat IPC layout as ``ipc_v<schema>_<identity>.json`` — so
+    # dead generations can be collected from the names alone, without
+    # parsing payloads
+    _FILE_RE = re.compile(r"_v(\d+)(?:_|\.(?:json|sqlite)$)")
 
     @staticmethod
     def gc(keep_schemas: Optional[Dict[str, int]] = None,
@@ -177,9 +317,11 @@ class ArtifactStore:
         ``keep_schemas`` maps a store family (the leading file-name token:
         ``ipc``, ``markov``, ``calib``, ``decisions``) to its live schema;
         defaults to ``live_schemas()``. Files of unknown families, or whose
-        version cannot be parsed, are left alone. Returns the removed paths
-        (empty when persistence is disabled or the directory is missing) —
-        the stores otherwise grow one dead file per schema bump forever.
+        version cannot be parsed, are left alone. Covers both backends
+        (``.json`` and ``.sqlite``, including the latter's ``-wal``/
+        ``-shm`` sidecars). Returns the removed paths (empty when
+        persistence is disabled or the directory is missing) — the stores
+        otherwise grow one dead file per schema bump forever.
         """
         if keep_schemas is None:
             keep_schemas = live_schemas()
@@ -188,7 +330,7 @@ class ArtifactStore:
             return []
         removed = []
         for fname in sorted(os.listdir(base)):
-            if not fname.endswith(".json"):
+            if not fname.endswith((".json", ".sqlite")):
                 continue
             family = fname.split("_", 1)[0]
             live = keep_schemas.get(family)
@@ -201,6 +343,12 @@ class ArtifactStore:
                 removed.append(path)
             except OSError:
                 pass                      # best effort: gc is maintenance
+            for sidecar in (path + "-wal", path + "-shm"):
+                try:
+                    os.unlink(sidecar)
+                    removed.append(sidecar)
+                except OSError:
+                    pass
         return removed
 
 
@@ -216,7 +364,30 @@ def live_schemas() -> Dict[str, int]:
     }
 
 
-class IPCCache(ArtifactStore):
+def ipc_store_name(gpu: GPUSpec, seed: int, rounds: int) -> str:
+    """Stem of the per-(gpu, seed, rounds) IPC store file (the backend
+    appends its own extension)."""
+    return f"ipc_v{_SCHEMA}_{content_digest(gpu)}_s{seed}_r{rounds}"
+
+
+class TypedIPCAccess:
+    """prof_ws-keyed get/put on top of a raw (kind, key) store — shared by
+    both IPC backends (``IPCCache`` and ``jobstore.SqliteIPCCache``)."""
+
+    def get(self, kind: str, prof_ws):
+        """kind: 'solo' | 'pair'; prof_ws: [(profile, w), ...]. Returns the
+        cached float / (cipc1, cipc2) tuple, or None on miss."""
+        val = super().get(kind, _entry_key(prof_ws))
+        if val is None:
+            return None
+        return tuple(val) if kind == "pair" else float(val)
+
+    def put(self, kind: str, prof_ws, value) -> None:
+        super().put(kind, _entry_key(prof_ws),
+                    list(value) if kind == "pair" else float(value))
+
+
+class IPCCache(TypedIPCAccess, ArtifactStore):
     """One on-disk IPC table per (gpu, seed, rounds). Keeps the historical
     flat file layout (top-level ``solo``/``pair`` dicts, schema in the file
     name) and the prof_ws-keyed get/put API on top of ``ArtifactStore``."""
@@ -226,9 +397,8 @@ class IPCCache(ArtifactStore):
         base = path if path is not None else cache_dir()
         fpath = None
         if base is not None:
-            fname = (f"ipc_v{_SCHEMA}_{content_digest(gpu)}"
-                     f"_s{seed}_r{rounds}.json")
-            fpath = os.path.join(base, fname)
+            fpath = os.path.join(base,
+                                 ipc_store_name(gpu, seed, rounds) + ".json")
         super().__init__("ipc", ("solo", "pair"), schema=_SCHEMA,
                          path=fpath)
 
@@ -242,16 +412,3 @@ class IPCCache(ArtifactStore):
 
     def _encode(self, data: dict) -> dict:
         return data
-
-    # ---- entry access (typed on top of the raw store) ---- #
-    def get(self, kind: str, prof_ws):
-        """kind: 'solo' | 'pair'; prof_ws: [(profile, w), ...]. Returns the
-        cached float / (cipc1, cipc2) tuple, or None on miss."""
-        val = super().get(kind, _entry_key(prof_ws))
-        if val is None:
-            return None
-        return tuple(val) if kind == "pair" else float(val)
-
-    def put(self, kind: str, prof_ws, value) -> None:
-        super().put(kind, _entry_key(prof_ws),
-                    list(value) if kind == "pair" else float(value))

@@ -1,0 +1,519 @@
+"""Durable serving state: the job state machine, the SQLite ``JobStore``,
+and the SQLite backend for the artifact store's hot tables.
+
+Kernelet is a *runtime* system: jobs arrive, get sliced, co-scheduled,
+preempted, cancelled — and the dispatcher that does this must survive a
+process restart without losing (or silently re-running) work. This module
+provides the durability layer the serving daemon
+(``repro.runtime.daemon``) is built on:
+
+  * **Job state machine.** Explicit states ``queued → running →
+    paused / cancelled / failed / finished`` with a transition table;
+    anything not in the table raises ``IllegalTransition``. The extra
+    ``running → queued`` edge is the crash-requeue: a job found
+    ``running`` by a restarted daemon was interrupted mid-drain and is
+    requeued for resumption from its last phase-boundary checkpoint.
+  * **``JobStore``.** One SQLite file (WAL mode, schema-versioned via
+    ``PRAGMA user_version``, single-writer by contract — the daemon owns
+    the connection) holding the jobs table, an append-only event log
+    (every transition is a row; the recovery tests compare event logs
+    bit-for-bit), per-job phase-boundary checkpoints, and final results.
+    Every mutation is one transaction, so a SIGKILL between any two
+    statements leaves a consistent store.
+  * **``SqliteArtifactStore``.** The hot-table backend for
+    ``repro.core.ipc_cache``: same (name, schema, kinds, get/put/save/gc)
+    contract as the JSON backend, but ``save()`` upserts only the entries
+    written since the last save — O(dirty) instead of the JSON backend's
+    O(total entries) whole-file rewrite (the PR 2/3 O(D²) hot-table
+    problem; ``benchmarks/daemon_recovery.py`` pins the speedup).
+    Selected via ``REPRO_STORE_BACKEND=sqlite``; the JSON backend remains
+    the default and the fallback.
+
+Durability model: WAL + ``synchronous=NORMAL`` — immune to process kills
+(what the fault-injection tests exercise); on whole-machine power loss the
+most recent commits may roll back but the file never tears. The artifact
+stores are caches (recomputable), the job store's checkpoint granularity
+is one drain phase, so either way no completed work is lost silently.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sqlite3
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import ipc_cache
+from repro.core.profiles import GPUSpec
+
+# ---------------------------------------------------------------- #
+# job state machine
+# ---------------------------------------------------------------- #
+
+QUEUED = "queued"
+RUNNING = "running"
+PAUSED = "paused"
+CANCELLED = "cancelled"
+FAILED = "failed"
+FINISHED = "finished"
+
+STATES = (QUEUED, RUNNING, PAUSED, CANCELLED, FAILED, FINISHED)
+TERMINAL_STATES = frozenset((CANCELLED, FAILED, FINISHED))
+
+# every legal edge; the running -> queued edge is the crash-requeue used
+# by daemon recovery (the job was interrupted, not restarted from scratch:
+# its checkpoint row still carries the phase-boundary state)
+TRANSITIONS: Dict[str, frozenset] = {
+    QUEUED: frozenset((RUNNING, CANCELLED)),
+    RUNNING: frozenset((PAUSED, CANCELLED, FAILED, FINISHED, QUEUED)),
+    PAUSED: frozenset((RUNNING, CANCELLED)),
+    CANCELLED: frozenset(),
+    FAILED: frozenset(),
+    FINISHED: frozenset(),
+}
+
+
+class IllegalTransition(RuntimeError):
+    """Raised for any job-state edge not in ``TRANSITIONS``."""
+
+
+class JobStoreError(RuntimeError):
+    """Storage-layer failure (unwritable/corrupt/schema-skewed database).
+    The daemon treats these as transient and retries with backoff before
+    degrading to read-only planning mode."""
+
+
+def check_transition(from_state: Optional[str], to_state: str) -> None:
+    """Validate one edge (``from_state=None`` means job creation, which
+    may only enter ``queued``)."""
+    if to_state not in STATES:
+        raise IllegalTransition(f"unknown state {to_state!r}")
+    if from_state is None:
+        if to_state != QUEUED:
+            raise IllegalTransition(
+                f"jobs are created queued, not {to_state!r}")
+        return
+    if from_state not in STATES:
+        raise IllegalTransition(f"unknown state {from_state!r}")
+    if to_state not in TRANSITIONS[from_state]:
+        raise IllegalTransition(
+            f"illegal transition {from_state!r} -> {to_state!r}")
+
+
+# bump when the jobs/events/checkpoints schema changes incompatibly
+JOBSTORE_SCHEMA = 1
+
+_JOBSTORE_DDL = (
+    """CREATE TABLE IF NOT EXISTS jobs (
+        job_id     TEXT PRIMARY KEY,
+        state      TEXT NOT NULL,
+        spec       TEXT NOT NULL,
+        result     TEXT,
+        created_at REAL NOT NULL,
+        updated_at REAL NOT NULL)""",
+    """CREATE TABLE IF NOT EXISTS events (
+        seq        INTEGER PRIMARY KEY AUTOINCREMENT,
+        job_id     TEXT NOT NULL,
+        ts         REAL NOT NULL,
+        from_state TEXT,
+        to_state   TEXT NOT NULL,
+        info       TEXT NOT NULL DEFAULT '')""",
+    """CREATE TABLE IF NOT EXISTS checkpoints (
+        job_id     TEXT PRIMARY KEY,
+        phase      INTEGER NOT NULL,
+        payload    TEXT NOT NULL,
+        updated_at REAL NOT NULL)""",
+)
+
+
+def _dumps(obj) -> str:
+    # default=float absorbs np.float64 totals; Python's repr round-trip
+    # keeps every float64 bit-exact through the store
+    return json.dumps(obj, default=float)
+
+
+class JobStore:
+    """SQLite-backed durable job state: jobs, transitions (event log),
+    phase-boundary checkpoints, results. Single-writer by contract — one
+    daemon process owns the file; concurrent readers are fine under WAL.
+    """
+
+    def __init__(self, path: str, *, timeout_s: float = 5.0):
+        self.path = path
+        try:
+            d = os.path.dirname(path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._conn = sqlite3.connect(path, timeout=timeout_s)
+            self._conn.execute("PRAGMA journal_mode=WAL")
+            self._conn.execute("PRAGMA synchronous=NORMAL")
+            self._init_schema()
+        except (OSError, sqlite3.Error) as e:
+            raise JobStoreError(f"cannot open job store at {path}: {e}") \
+                from e
+
+    def _init_schema(self) -> None:
+        ver = self._conn.execute("PRAGMA user_version").fetchone()[0]
+        if ver == 0:
+            has_jobs = self._conn.execute(
+                "SELECT name FROM sqlite_master WHERE type='table' "
+                "AND name='jobs'").fetchone()
+            if has_jobs is not None:
+                # a pre-versioning file would land here; there is none, so
+                # any unversioned file with a jobs table is foreign
+                raise JobStoreError(
+                    f"{self.path}: jobs table without a schema version")
+            with self._conn:
+                for ddl in _JOBSTORE_DDL:
+                    self._conn.execute(ddl)
+                self._conn.execute(
+                    f"PRAGMA user_version = {JOBSTORE_SCHEMA:d}")
+        elif ver != JOBSTORE_SCHEMA:
+            # durable state is NOT a cache: refuse loudly instead of
+            # silently starting empty next to real jobs
+            raise JobStoreError(
+                f"{self.path}: schema version {ver} != {JOBSTORE_SCHEMA} "
+                "(migrate or point the daemon at a fresh store)")
+
+    def close(self) -> None:
+        try:
+            self._conn.close()
+        except sqlite3.Error:
+            pass
+
+    # ---- jobs ---- #
+    def create_job(self, job_id: str, spec: dict) -> None:
+        check_transition(None, QUEUED)
+        now = time.time()
+        try:
+            with self._conn:
+                self._conn.execute(
+                    "INSERT INTO jobs (job_id, state, spec, created_at, "
+                    "updated_at) VALUES (?, ?, ?, ?, ?)",
+                    (job_id, QUEUED, _dumps(spec), now, now))
+                self._conn.execute(
+                    "INSERT INTO events (job_id, ts, from_state, to_state, "
+                    "info) VALUES (?, ?, NULL, ?, ?)",
+                    (job_id, now, QUEUED, "submitted"))
+        except sqlite3.IntegrityError as e:
+            raise JobStoreError(f"job {job_id!r} already exists") from e
+        except sqlite3.Error as e:
+            raise JobStoreError(str(e)) from e
+
+    def transition(self, job_id: str, to_state: str, info: str = "",
+                   result: Optional[dict] = None) -> None:
+        """Validated state transition; the jobs row update, the event-log
+        append, and (optionally) the final result land in one transaction.
+        """
+        try:
+            with self._conn:
+                row = self._conn.execute(
+                    "SELECT state FROM jobs WHERE job_id = ?",
+                    (job_id,)).fetchone()
+                if row is None:
+                    raise KeyError(f"unknown job {job_id!r}")
+                check_transition(row[0], to_state)
+                now = time.time()
+                if result is not None:
+                    self._conn.execute(
+                        "UPDATE jobs SET state = ?, result = ?, "
+                        "updated_at = ? WHERE job_id = ?",
+                        (to_state, _dumps(result), now, job_id))
+                else:
+                    self._conn.execute(
+                        "UPDATE jobs SET state = ?, updated_at = ? "
+                        "WHERE job_id = ?", (to_state, now, job_id))
+                self._conn.execute(
+                    "INSERT INTO events (job_id, ts, from_state, to_state, "
+                    "info) VALUES (?, ?, ?, ?, ?)",
+                    (job_id, now, row[0], to_state, info))
+        except sqlite3.Error as e:
+            raise JobStoreError(str(e)) from e
+
+    def state(self, job_id: str) -> Optional[str]:
+        try:
+            row = self._conn.execute(
+                "SELECT state FROM jobs WHERE job_id = ?",
+                (job_id,)).fetchone()
+        except sqlite3.Error as e:
+            raise JobStoreError(str(e)) from e
+        return None if row is None else row[0]
+
+    def spec(self, job_id: str) -> dict:
+        try:
+            row = self._conn.execute(
+                "SELECT spec FROM jobs WHERE job_id = ?",
+                (job_id,)).fetchone()
+        except sqlite3.Error as e:
+            raise JobStoreError(str(e)) from e
+        if row is None:
+            raise KeyError(f"unknown job {job_id!r}")
+        return json.loads(row[0])
+
+    def result(self, job_id: str) -> Optional[dict]:
+        try:
+            row = self._conn.execute(
+                "SELECT result FROM jobs WHERE job_id = ?",
+                (job_id,)).fetchone()
+        except sqlite3.Error as e:
+            raise JobStoreError(str(e)) from e
+        if row is None or row[0] is None:
+            return None
+        return json.loads(row[0])
+
+    def jobs(self, state: Optional[str] = None) -> List[Tuple[str, str]]:
+        """(job_id, state) rows, submission-ordered; optionally filtered."""
+        try:
+            if state is None:
+                rows = self._conn.execute(
+                    "SELECT job_id, state FROM jobs "
+                    "ORDER BY created_at, job_id").fetchall()
+            else:
+                rows = self._conn.execute(
+                    "SELECT job_id, state FROM jobs WHERE state = ? "
+                    "ORDER BY created_at, job_id", (state,)).fetchall()
+        except sqlite3.Error as e:
+            raise JobStoreError(str(e)) from e
+        return [(r[0], r[1]) for r in rows]
+
+    def events(self, job_id: Optional[str] = None) -> List[tuple]:
+        """Append-only transition log: (seq, job_id, from, to, info)."""
+        try:
+            if job_id is None:
+                rows = self._conn.execute(
+                    "SELECT seq, job_id, from_state, to_state, info "
+                    "FROM events ORDER BY seq").fetchall()
+            else:
+                rows = self._conn.execute(
+                    "SELECT seq, job_id, from_state, to_state, info "
+                    "FROM events WHERE job_id = ? ORDER BY seq",
+                    (job_id,)).fetchall()
+        except sqlite3.Error as e:
+            raise JobStoreError(str(e)) from e
+        return [tuple(r) for r in rows]
+
+    # ---- checkpoints ---- #
+    def save_checkpoint(self, job_id: str, phase: int,
+                        payload: dict) -> None:
+        try:
+            with self._conn:
+                self._conn.execute(
+                    "INSERT INTO checkpoints (job_id, phase, payload, "
+                    "updated_at) VALUES (?, ?, ?, ?) "
+                    "ON CONFLICT(job_id) DO UPDATE SET phase = excluded."
+                    "phase, payload = excluded.payload, updated_at = "
+                    "excluded.updated_at",
+                    (job_id, int(phase), _dumps(payload), time.time()))
+        except sqlite3.Error as e:
+            raise JobStoreError(str(e)) from e
+
+    def load_checkpoint(self, job_id: str) -> Optional[Tuple[int, dict]]:
+        try:
+            row = self._conn.execute(
+                "SELECT phase, payload FROM checkpoints WHERE job_id = ?",
+                (job_id,)).fetchone()
+        except sqlite3.Error as e:
+            raise JobStoreError(str(e)) from e
+        if row is None:
+            return None
+        return int(row[0]), json.loads(row[1])
+
+    def drop_checkpoint(self, job_id: str) -> None:
+        try:
+            with self._conn:
+                self._conn.execute(
+                    "DELETE FROM checkpoints WHERE job_id = ?", (job_id,))
+        except sqlite3.Error as e:
+            raise JobStoreError(str(e)) from e
+
+
+class MemoryJobStore:
+    """In-memory ``JobStore`` stand-in: the daemon's read-only-degrade
+    target when the durable store is unwritable. Same API and the same
+    state-machine validation; nothing survives the process."""
+
+    def __init__(self):
+        self._jobs: Dict[str, dict] = {}
+        self._events: List[tuple] = []
+        self._ckpts: Dict[str, Tuple[int, dict]] = {}
+        self.path = None
+
+    def close(self) -> None:
+        pass
+
+    def create_job(self, job_id: str, spec: dict) -> None:
+        check_transition(None, QUEUED)
+        if job_id in self._jobs:
+            raise JobStoreError(f"job {job_id!r} already exists")
+        self._jobs[job_id] = {"state": QUEUED,
+                              "spec": json.loads(_dumps(spec)),
+                              "result": None}
+        self._events.append((len(self._events) + 1, job_id, None, QUEUED,
+                             "submitted"))
+
+    def transition(self, job_id: str, to_state: str, info: str = "",
+                   result: Optional[dict] = None) -> None:
+        job = self._jobs.get(job_id)
+        if job is None:
+            raise KeyError(f"unknown job {job_id!r}")
+        check_transition(job["state"], to_state)
+        self._events.append((len(self._events) + 1, job_id, job["state"],
+                             to_state, info))
+        job["state"] = to_state
+        if result is not None:
+            job["result"] = json.loads(_dumps(result))
+
+    def state(self, job_id: str) -> Optional[str]:
+        job = self._jobs.get(job_id)
+        return None if job is None else job["state"]
+
+    def spec(self, job_id: str) -> dict:
+        return self._jobs[job_id]["spec"]
+
+    def result(self, job_id: str) -> Optional[dict]:
+        return self._jobs[job_id]["result"]
+
+    def jobs(self, state: Optional[str] = None) -> List[Tuple[str, str]]:
+        return [(jid, j["state"]) for jid, j in self._jobs.items()
+                if state is None or j["state"] == state]
+
+    def events(self, job_id: Optional[str] = None) -> List[tuple]:
+        return [e for e in self._events
+                if job_id is None or e[1] == job_id]
+
+    def save_checkpoint(self, job_id: str, phase: int,
+                        payload: dict) -> None:
+        self._ckpts[job_id] = (int(phase), json.loads(_dumps(payload)))
+
+    def load_checkpoint(self, job_id: str) -> Optional[Tuple[int, dict]]:
+        return self._ckpts.get(job_id)
+
+    def drop_checkpoint(self, job_id: str) -> None:
+        self._ckpts.pop(job_id, None)
+
+
+# ---------------------------------------------------------------- #
+# SQLite backend for the artifact store's hot tables
+# ---------------------------------------------------------------- #
+
+class SqliteArtifactStore(ipc_cache.ArtifactStore):
+    """``ArtifactStore`` on SQLite: one ``<name>_v<schema>.sqlite`` file,
+    entries in a (kind, key, value) table. ``save()`` upserts only the
+    entries written since the last successful save — O(dirty), killing
+    the JSON backend's whole-file rewrite — and the upsert union gives
+    the same merge-on-save semantics (entries are content-addressed, so
+    last-writer-wins is always valid).
+
+    Failure contract matches the JSON backend: a corrupt or unreadable
+    database loads as empty (and is quarantined so the next save can
+    recreate it); an unwritable location degrades to in-memory with the
+    store left dirty for a later retry.
+    """
+
+    def __init__(self, name: str, kinds: Sequence[str], schema: int = 1,
+                 path: Optional[str] = None, dirname: Optional[str] = None):
+        if path is None:
+            base = dirname if dirname is not None else ipc_cache.cache_dir()
+            path = (None if base is None
+                    else os.path.join(base, f"{name}_v{schema}.sqlite"))
+        self._fresh: Dict[tuple, object] = {}
+        super().__init__(name, kinds, schema=schema, path=path)
+
+    # ---- connection plumbing (per call: no lifecycle to manage) ---- #
+    def _connect(self) -> sqlite3.Connection:
+        conn = sqlite3.connect(self.path, timeout=5.0)
+        conn.execute("PRAGMA busy_timeout = 5000")
+        conn.execute("PRAGMA journal_mode=WAL")
+        conn.execute("PRAGMA synchronous=NORMAL")
+        return conn
+
+    def _quarantine(self) -> None:
+        """Drop an unreadable database file (plus WAL sidecars) so the
+        next save starts clean — caches recompute, they never block."""
+        for p in (self.path, self.path + "-wal", self.path + "-shm"):
+            try:
+                os.unlink(p)
+            except OSError:
+                pass
+
+    def _load(self) -> dict:
+        if self.path is None or not os.path.exists(self.path):
+            return self._empty()
+        data = self._empty()
+        try:
+            conn = self._connect()
+        except sqlite3.Error:
+            self._quarantine()
+            return self._empty()
+        try:
+            ver = conn.execute("PRAGMA user_version").fetchone()[0]
+            if ver != self._schema:
+                # file-name and embedded versions disagree (hand-copied
+                # file): reject the contents, recreate on next save
+                return self._empty()
+            for kind, key, raw in conn.execute(
+                    "SELECT kind, key, value FROM entries"):
+                if kind in data:
+                    data[kind][key] = json.loads(raw)
+        except (sqlite3.Error, ValueError):
+            self._quarantine()
+            return self._empty()
+        finally:
+            try:
+                conn.close()
+            except sqlite3.Error:
+                pass
+        return data
+
+    def put(self, kind: str, key: str, value) -> None:
+        super().put(kind, key, value)
+        if self.path is not None:
+            self._fresh[(kind, key)] = value
+
+    def save(self) -> None:
+        if self.path is None or not self._dirty:
+            return
+        try:
+            d = os.path.dirname(self.path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            conn = self._connect()
+        except (OSError, sqlite3.Error):
+            return                        # unwritable: stay dirty, retry later
+        try:
+            with conn:
+                conn.execute(
+                    "CREATE TABLE IF NOT EXISTS entries ("
+                    "kind TEXT NOT NULL, key TEXT NOT NULL, "
+                    "value TEXT NOT NULL, PRIMARY KEY (kind, key))")
+                conn.execute(f"PRAGMA user_version = {self._schema:d}")
+                rows = [(k, key, json.dumps(v))
+                        for (k, key), v in self._fresh.items()]
+                conn.executemany(
+                    "INSERT OR REPLACE INTO entries (kind, key, value) "
+                    "VALUES (?, ?, ?)", rows)
+            self._fresh.clear()
+            self._dirty = False
+        except sqlite3.Error:
+            pass                          # degraded: stay dirty, retry later
+        finally:
+            try:
+                conn.close()
+            except sqlite3.Error:
+                pass
+
+
+class SqliteIPCCache(ipc_cache.TypedIPCAccess, SqliteArtifactStore):
+    """SQLite counterpart of ``IPCCache``: same per-(gpu, seed, rounds)
+    file identity and prof_ws-keyed typed access, sqlite storage."""
+
+    def __init__(self, gpu: GPUSpec, seed: int, rounds: int,
+                 path: Optional[str] = None):
+        base = path if path is not None else ipc_cache.cache_dir()
+        fpath = None
+        if base is not None:
+            fpath = os.path.join(
+                base, ipc_cache.ipc_store_name(gpu, seed, rounds)
+                + ".sqlite")
+        super().__init__("ipc", ("solo", "pair"), schema=ipc_cache._SCHEMA,
+                         path=fpath)

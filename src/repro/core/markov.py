@@ -50,12 +50,12 @@ _SOLVES: dict = {}
 
 
 @functools.lru_cache(maxsize=16)
-def _store_at(gpu: GPUSpec, three_state: bool,
-              dirname: str) -> ipc_cache.ArtifactStore:
+def _store_at(gpu: GPUSpec, three_state: bool, dirname: str,
+              backend: str = "json") -> ipc_cache.ArtifactStore:
     tag = "3s" if three_state else "2s"
-    return ipc_cache.ArtifactStore(
+    return ipc_cache.open_store(
         f"markov_{content_digest(gpu)}_{tag}", ("single", "pair"),
-        schema=MARKOV_SCHEMA, dirname=dirname)
+        schema=MARKOV_SCHEMA, dirname=dirname, backend=backend)
 
 
 def _solve_store(gpu: GPUSpec,
@@ -66,7 +66,7 @@ def _solve_store(gpu: GPUSpec,
     base = ipc_cache.cache_dir()
     if base is None:
         return None
-    return _store_at(gpu, three_state, base)
+    return _store_at(gpu, three_state, base, ipc_cache.store_backend())
 
 
 def _solve_key(prof_ws) -> str:

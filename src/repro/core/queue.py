@@ -252,6 +252,58 @@ class _Pending:
         self.completions.extend(done)
         return done
 
+    # ---- checkpoint serialization (daemon phase-boundary snapshots) ---- #
+    def to_json(self) -> dict:
+        """Full ledger state as JSON-safe types. Floats survive exactly
+        (repr shortest round-trip), so a restored queue replays the same
+        IEEE-754 sequence; ``inf`` deadlines serialize as JSON Infinity
+        (Python's json reads them back)."""
+        st = {
+            "timed": self._timed,
+            "interp": self._interp,
+            "blocks": dict(self.blocks),
+            "order": list(self._order),
+            "queue": [list(e) for e in self._queue],
+            "phase_start": self._phase_start,
+            "phase_base": dict(self._phase_base),
+            "completions": [list(c) for c in self.completions],
+        }
+        if self._timed:
+            st["admitted"] = dict(self._admitted)
+            st["drained"] = dict(self._drained)
+            st["instances"] = {n: [list(e) for e in q]
+                               for n, q in self._instances.items()}
+        return st
+
+    @classmethod
+    def from_json(cls, profiles, st: dict) -> "_Pending":
+        """Rebuild a queue from ``to_json`` output (+ the profile dict,
+        which is code-side state, not checkpoint payload)."""
+        self = cls.__new__(cls)
+        self.profiles = profiles
+        self._timed = bool(st["timed"])
+        self._interp = bool(st["interp"])
+        self.blocks = {n: float(b) for n, b in st["blocks"].items()}
+        self._order = {n: None for n in st["order"]}
+        self._queue = collections.deque(
+            (float(t), n, float(dl)) for t, n, dl in st["queue"])
+        ps = st["phase_start"]
+        self._phase_start = None if ps is None else float(ps)
+        self._phase_base = {n: float(v)
+                            for n, v in st["phase_base"].items()}
+        self.completions = [(n, float(a), float(c))
+                            for n, a, c in st["completions"]]
+        if self._timed:
+            self._admitted = {n: float(v)
+                              for n, v in st["admitted"].items()}
+            self._drained = {n: float(v)
+                             for n, v in st["drained"].items()}
+            self._instances = {
+                n: collections.deque((float(a), float(c), float(dl))
+                                     for a, c, dl in q)
+                for n, q in st["instances"].items()}
+        return self
+
     def drain(self, name, blocks):
         cur = self.blocks.get(name)
         if cur is None:

@@ -53,10 +53,11 @@ def decision_cache_enabled() -> bool:
 
 
 @functools.lru_cache(maxsize=64)
-def _decision_store_at(tag: str, dirname: str) -> ipc_cache.ArtifactStore:
-    return ipc_cache.ArtifactStore(
+def _decision_store_at(tag: str, dirname: str,
+                       backend: str) -> ipc_cache.ArtifactStore:
+    return ipc_cache.open_store(
         f"decisions_{tag}", ("coschedule",), schema=DECISION_STORE_SCHEMA,
-        dirname=dirname)
+        dirname=dirname, backend=backend)
 
 
 @dataclasses.dataclass
@@ -145,7 +146,8 @@ class KerneletScheduler:
         base = ipc_cache.cache_dir()
         if base is None:
             return None
-        return _decision_store_at(self._store_tag, base)
+        return _decision_store_at(self._store_tag, base,
+                                  ipc_cache.store_backend())
 
     def _decision_skey(self, names) -> str:
         profs = "|".join(f"{n}:{content_digest(self.profiles[n])}"

@@ -494,7 +494,7 @@ class IPCTable:
         self.rounds = rounds
         self._solo = {}
         self._pair = {}
-        self._store = (ipc_cache.IPCCache(gpu, seed, rounds)
+        self._store = (ipc_cache.open_ipc_cache(gpu, seed, rounds)
                        if persist else None)
 
     # ---- persistent-store plumbing ---- #

@@ -24,7 +24,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +57,7 @@ class SharedPodServer:
         self.model = MarkovModel(gpu_spec.virtual(), three_state=True)
         self.jobs: Dict[str, Job] = {}
         self.profiles: Dict[str, KernelProfile] = {}
-        self._exec: Dict[str, callable] = {}
+        self._exec: Dict[str, Callable] = {}
         self._args: Dict[str, tuple] = {}
         self.key = jax.random.PRNGKey(seed)
         self.log: List[tuple] = []
@@ -203,6 +203,15 @@ class SharedPodServer:
         drain the dispatcher is about to execute; ``plan_policy`` selects
         the planning policy (e.g. ``"EDF-KERNELET"`` for a deadline-aware
         plan)."""
+        # fail fast with a clear message, not a KeyError mid-dispatch: a
+        # pending job must have completed submit() (profile + executable)
+        missing = sorted(n for n, j in self.jobs.items() if j.num_slices > 0
+                         and (n not in self._exec or n not in self.profiles))
+        if missing:
+            raise ValueError(
+                f"pending jobs with no registered profile/executable: "
+                f"{missing} — submit() must complete for every job "
+                "before drain()")
         engine = WorkloadEngine()
         sched = engine.scheduler_for(self.spec, self.profiles,
                                      alpha_p=0.2, alpha_m=0.2, cp_margin=0.0)

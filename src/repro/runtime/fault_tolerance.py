@@ -18,8 +18,6 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.checkpoint import store
-
 
 class HostFailure(RuntimeError):
     pass
@@ -27,18 +25,33 @@ class HostFailure(RuntimeError):
 
 @dataclasses.dataclass
 class ResilientLoop:
-    """Checkpoint-every-N training wrapper with crash recovery."""
+    """Checkpoint-every-N training wrapper with crash recovery.
+
+    ``store`` is any object with the ``repro.checkpoint.store`` surface
+    (``save(dir, step, state)`` / ``latest_step(dir)`` /
+    ``restore(dir, template) -> (state, step)``); it defaults to that
+    module, resolved lazily so numpy-only callers (the serving daemon's
+    job-store-backed adapter, tier-1 CI) never pull in the jax import
+    chain just by importing this module."""
     step_fn: Callable            # (state, batch) -> (state, metrics)
     state: object                # pytree (params, opt state, ...)
     loader: object               # .load(step) -> batch
     ckpt_dir: str
     ckpt_every: int = 50
     max_retries: int = 3
+    store: object = None         # checkpoint backend (None: npz module)
+
+    def _store(self):
+        if self.store is None:
+            from repro.checkpoint import store as npz_store
+            self.store = npz_store
+        return self.store
 
     def run(self, num_steps: int, *, fail_at: Optional[dict] = None,
             start_step: int = 0):
         """fail_at: {step: n_times} injected HostFailures (testing)."""
         fail_at = dict(fail_at or {})
+        store = self._store()
         step = start_step
         retries = 0
         while step < num_steps:

@@ -1,0 +1,334 @@
+"""Fault-injection tests for the durable serving daemon.
+
+The load-bearing proof of PR 6: SIGKILL the daemon process mid-drain at
+randomized phase boundaries, restart it, and the completed replay must be
+bit-identical (totals, event log, completions) to an uninterrupted run —
+for all six policies, under both store backends. Plus the in-process
+robustness surface: retry-with-backoff, retries-exhausted -> failed,
+cancel/pause/resume, preemption via the phase-truncation cap, read-only
+degrade, and ``ResilientLoop`` wired to the daemon's checkpoint store.
+
+numpy-only — runs in the tier-1 CI tier (the subprocesses run with the
+artifact cache off or pointed at the test tmpdir, so they are hermetic).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.jobstore import (CANCELLED, FAILED, FINISHED, PAUSED,
+                                 QUEUED, RUNNING, JobStore)
+from repro.runtime.daemon import JobStoreCheckpoints, ServingDaemon
+from repro.runtime.fault_tolerance import HostFailure, ResilientLoop
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+PROFILES = {
+    "A": dict(name="A", rm=0.05, coal=1.0, insns_per_block=50.0,
+              num_blocks=32, occupancy=1.0),
+    "B": dict(name="B", rm=0.4, coal=0.5, insns_per_block=70.0,
+              num_blocks=32, occupancy=1.0),
+    "C": dict(name="C", rm=0.15, coal=0.9, insns_per_block=90.0,
+              num_blocks=48, occupancy=1.0),
+    "D": dict(name="D", rm=0.6, coal=0.4, insns_per_block=40.0,
+              num_blocks=24, occupancy=0.75),
+}
+ORDER = ["A", "B", "C", "D", "B", "A", "D", "C", "A", "B", "C", "D"]
+POLICIES = ("BASE", "MC", "KERNELET", "OPT", "EDF-KERNELET", "PWAIT-CP")
+ROUNDS = 600
+
+
+def _job_specs():
+    arr = [float(t) for t in np.cumsum(
+        np.random.default_rng(7).exponential(4e5, size=len(ORDER)))]
+    jobs = {}
+    for pol in POLICIES:
+        spec = {"policy": pol, "profiles": PROFILES, "order": ORDER,
+                "gpu": "C2050", "rounds": ROUNDS, "table_seed": 0,
+                "persist": False, "seed": 3}
+        if pol in ("EDF-KERNELET", "PWAIT-CP"):
+            spec["arrivals"] = arr
+            spec["slo_deadline"] = 2.0e6
+        jobs[f"job-{pol}"] = spec
+    return jobs
+
+
+def _run_daemon(workdir, store, out, *extra, backend="json",
+                cache_dir="0"):
+    env = {**os.environ, "PYTHONPATH": SRC, "REPRO_IPC_CACHE": cache_dir,
+           "REPRO_STORE_BACKEND": backend}
+    cmd = [sys.executable, "-m", "repro.runtime.daemon",
+           "--store", str(store), "--jobs", str(workdir / "jobs.json"),
+           "--out", str(out), *extra]
+    return subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=600)
+
+
+@pytest.fixture(scope="module")
+def reference(tmp_path_factory):
+    """One uninterrupted daemon run over all six policies — the oracle
+    every interrupted variant must reproduce bit-for-bit."""
+    tmp = tmp_path_factory.mktemp("daemon_ref")
+    (tmp / "jobs.json").write_text(json.dumps(_job_specs()))
+    r = _run_daemon(tmp, tmp / "pod.sqlite", tmp / "out.json")
+    assert r.returncode == 0, r.stderr
+    return json.loads((tmp / "out.json").read_text())
+
+
+def _assert_bit_identical(got, ref):
+    assert set(got) == set(ref)
+    for jid in ref:
+        assert got[jid]["state"] == "finished", (jid, got[jid]["state"])
+        a, b = ref[jid]["result"], got[jid]["result"]
+        assert b["total_cycles"] == a["total_cycles"], jid
+        assert b["n_coschedules"] == a["n_coschedules"], jid
+        assert b["n_slices"] == a["n_slices"], jid
+        assert b["time_line"] == a["time_line"], jid
+        assert b["completions"] == a["completions"], jid
+
+
+def test_kill_mid_drain_then_restart_bit_identical(tmp_path, reference):
+    """SIGKILL at a randomized checkpoint, restart, compare: the recovery
+    path and the event-sourced checkpoints must reproduce the exact
+    replay, including the policies with RNG (MC) and arrival-timed
+    ledgers (EDF-KERNELET, PWAIT-CP)."""
+    (tmp_path / "jobs.json").write_text(json.dumps(_job_specs()))
+    kills = sorted(np.random.default_rng(1234).integers(3, 20, size=2))
+    store, out = tmp_path / "pod.sqlite", tmp_path / "out.json"
+    # two kills back to back (the second restart is itself killed), then
+    # a clean restart that must complete everything
+    for k in kills:
+        r = _run_daemon(tmp_path, store, out,
+                        "--kill-after-checkpoints", str(k))
+        assert r.returncode == -9, (r.returncode, r.stderr)
+    r = _run_daemon(tmp_path, store, out)
+    assert r.returncode == 0, r.stderr
+    got = json.loads(out.read_text())
+    _assert_bit_identical(got, reference)
+    # the job store's event log must show the crash-requeue edge: at
+    # least one job was killed mid-drain and recovered
+    recovered = [jid for jid in got
+                 if ["running", "queued", "recovered"] in got[jid]["events"]]
+    assert recovered, "kill landed between jobs, not mid-drain"
+
+
+def test_sqlite_backend_replay_matches_json(tmp_path, reference):
+    """The SQLite artifact-store backend must be decision-invisible: a
+    daemon run with warm sqlite decision/markov/ipc stores (kill/restart
+    included, so recovery reads them twice) reproduces the json-backend
+    reference bit-for-bit."""
+    (tmp_path / "jobs.json").write_text(json.dumps(_job_specs()))
+    cache = tmp_path / "artifacts"
+    store, out = tmp_path / "pod.sqlite", tmp_path / "out.json"
+    r = _run_daemon(tmp_path, store, out, "--kill-after-checkpoints", "9",
+                    backend="sqlite", cache_dir=str(cache))
+    assert r.returncode == -9, (r.returncode, r.stderr)
+    r = _run_daemon(tmp_path, store, out, backend="sqlite",
+                    cache_dir=str(cache))
+    assert r.returncode == 0, r.stderr
+    _assert_bit_identical(json.loads(out.read_text()), reference)
+    assert any(f.endswith(".sqlite") for f in os.listdir(cache))
+
+
+# ------------------------------------------------------------------ #
+# in-process daemon robustness
+# ------------------------------------------------------------------ #
+def _spec(policy="KERNELET", **kw):
+    spec = {"policy": policy, "profiles": PROFILES, "order": ORDER,
+            "gpu": "C2050", "rounds": ROUNDS, "persist": False, "seed": 3}
+    spec.update(kw)
+    return spec
+
+
+@pytest.fixture(autouse=True)
+def _no_cache(monkeypatch):
+    monkeypatch.setenv("REPRO_IPC_CACHE", "0")
+
+
+def test_transient_faults_resume_from_checkpoint(tmp_path):
+    """HostFailures injected at checkpoints resume from the last
+    phase-boundary snapshot with capped exponential backoff — and the
+    result is still bit-identical to a fault-free run."""
+    ref_d = ServingDaemon(str(tmp_path / "ref.sqlite"))
+    ref_d.submit("j", _spec("MC"))
+    assert ref_d.run_until_idle() == {"j": FINISHED}
+    ref = ref_d.store.result("j")
+
+    faults = {"left": 3}
+
+    def chaos(daemon, job_id, phase):
+        if faults["left"] > 0:
+            faults["left"] -= 1
+            raise HostFailure(f"injected at phase {phase}")
+
+    sleeps = []
+    d = ServingDaemon(str(tmp_path / "pod.sqlite"), on_checkpoint=chaos,
+                      max_retries=5, backoff_base=0.01, backoff_cap=0.02,
+                      sleep=sleeps.append)
+    d.submit("j", _spec("MC"))
+    assert d.run_until_idle() == {"j": FINISHED}
+    got = d.store.result("j")
+    assert got["total_cycles"] == ref["total_cycles"]
+    assert got["time_line"] == ref["time_line"]
+    # capped exponential backoff: 0.01, 0.02, then pinned at the cap
+    assert sleeps == [0.01, 0.02, 0.02]
+
+
+def test_retries_exhausted_fails_not_hangs(tmp_path):
+    def always_fail(daemon, job_id, phase):
+        raise HostFailure("host is gone")
+
+    sleeps = []
+    d = ServingDaemon(str(tmp_path / "pod.sqlite"),
+                      on_checkpoint=always_fail, max_retries=2,
+                      backoff_base=0.01, sleep=sleeps.append)
+    d.submit("j", _spec())
+    assert d.run_until_idle() == {"j": FAILED}
+    assert d.store.state("j") == FAILED
+    assert len(sleeps) == 2              # retried exactly max_retries times
+    edges = [(e[2], e[3]) for e in d.store.events("j")]
+    assert edges[-1] == (RUNNING, FAILED)
+
+
+def test_cancel_at_phase_boundary(tmp_path):
+    fired = {"done": False}
+
+    def hook(daemon, job_id, phase):
+        if phase >= 2 and not fired["done"]:
+            fired["done"] = True
+            daemon.cancel(job_id)
+
+    d = ServingDaemon(str(tmp_path / "pod.sqlite"), on_checkpoint=hook)
+    d.submit("j", _spec())
+    assert d.run_until_idle() == {"j": CANCELLED}
+    res = d.store.result("j")
+    assert res["partial"] is True
+    assert 0 < len(res["time_line"]) < 30    # stopped early, with progress
+    # queued jobs cancel immediately, with no partial result
+    d.submit("q", _spec())
+    d.cancel("q")
+    assert d.store.state("q") == CANCELLED
+
+
+def test_pause_resume_bit_identical(tmp_path):
+    ref_d = ServingDaemon(str(tmp_path / "ref.sqlite"))
+    ref_d.submit("j", _spec("EDF-KERNELET", arrivals=[0.0] * len(ORDER),
+                            slo_deadline=2.0e6))
+    ref_d.run_until_idle()
+    ref = ref_d.store.result("j")
+
+    fired = {"done": False}
+
+    def hook(daemon, job_id, phase):
+        if phase >= 3 and not fired["done"]:
+            fired["done"] = True
+            daemon.pause(job_id)
+
+    d = ServingDaemon(str(tmp_path / "pod.sqlite"), on_checkpoint=hook)
+    d.submit("j", _spec("EDF-KERNELET", arrivals=[0.0] * len(ORDER),
+                        slo_deadline=2.0e6))
+    assert d.run_until_idle() == {"j": PAUSED}
+    assert d.store.state("j") == PAUSED
+    assert d.resume("j") == FINISHED
+    got = d.store.result("j")
+    assert got["total_cycles"] == ref["total_cycles"]
+    assert got["time_line"] == ref["time_line"]
+    assert got["completions"] == ref["completions"]
+
+
+def test_preempt_truncates_at_cap(tmp_path):
+    """Preemption reuses the PR 4 phase-truncation cap: the in-flight
+    phase is cut at the requested clock value and the job parks paused —
+    then resumes to completion, deterministically."""
+    probe = ServingDaemon(str(tmp_path / "probe.sqlite"))
+    probe.submit("j", _spec())
+    probe.run_until_idle()
+    full = probe.store.result("j")
+    cut = full["total_cycles"] / 2.0
+
+    def run_preempted(tag):
+        d = ServingDaemon(str(tmp_path / f"{tag}.sqlite"))
+        d.submit("j", _spec())
+        d.preempt("j", cut)
+        assert d.run_until_idle() == {"j": PAUSED}
+        ck = d.store.load_checkpoint("j")
+        assert ck is not None
+        paused_at = ck[1]["total"]
+        # parked at the first boundary at/after the cap — not at the
+        # natural end of the phase that was running when the cap hit
+        assert cut <= paused_at < full["total_cycles"]
+        assert d.resume("j") == FINISHED
+        return paused_at, d.store.result("j")
+
+    at1, res1 = run_preempted("a")
+    at2, res2 = run_preempted("b")
+    assert at1 == at2                          # deterministic preemption
+    assert res1["total_cycles"] == res2["total_cycles"]
+    assert res1["time_line"] == res2["time_line"]
+    # the preempted replay drained everything (same work, extra boundary)
+    assert res1["time_line"][-1][0] == res1["total_cycles"]
+
+
+def test_read_only_degrade_still_serves(tmp_path):
+    blocker = tmp_path / "f"
+    blocker.write_text("x")
+    d = ServingDaemon(str(blocker / "nope" / "pod.sqlite"))
+    assert d.read_only
+    d.submit("j", _spec("BASE"))
+    assert d.run_until_idle() == {"j": FINISHED}
+    assert d.store.result("j")["total_cycles"] > 0
+    assert not blocker.is_dir()          # nothing was written anywhere
+
+
+def test_unknown_gpu_or_policy_is_a_clear_error(tmp_path):
+    d = ServingDaemon(str(tmp_path / "pod.sqlite"))
+    with pytest.raises(ValueError, match="unknown GPU"):
+        d.lane_spec(_spec(gpu="H9000"))
+
+
+# ------------------------------------------------------------------ #
+# ResilientLoop on the daemon's checkpoint store
+# ------------------------------------------------------------------ #
+class _Loader:
+    def load(self, step):
+        return float(step)
+
+
+def _step_fn(state, batch):
+    return {"acc": state["acc"] + batch * 1.5, "steps": state["steps"] + 1}, {}
+
+
+def test_resilient_loop_on_jobstore_checkpoints(tmp_path):
+    """ResilientLoop with the JobStore-backed checkpoint adapter: injected
+    HostFailures resume from the last phase-boundary checkpoint and the
+    final state is bit-identical to a fault-free run — no npz files, no
+    jax import chain."""
+    store = JobStore(str(tmp_path / "pod.sqlite"))
+    store.create_job("train", {})
+    ckpts = JobStoreCheckpoints(store)
+
+    clean, end = ResilientLoop(_step_fn, {"acc": 0.0, "steps": 0},
+                               _Loader(), "train-clean", ckpt_every=4,
+                               store=JobStoreCheckpoints(store)).run(21)
+    store.create_job("train-clean", {})   # ids only matter per run
+    loop = ResilientLoop(_step_fn, {"acc": 0.0, "steps": 0}, _Loader(),
+                         "train", ckpt_every=4, max_retries=3, store=ckpts)
+    state, step = loop.run(21, fail_at={7: 1, 13: 2})
+    assert step == end == 21
+    assert state == clean                 # bit-identical resume
+    assert ckpts.latest_step("train") == 21
+
+
+def test_resilient_loop_exhausts_retries(tmp_path):
+    store = JobStore(str(tmp_path / "pod.sqlite"))
+    store.create_job("train", {})
+    loop = ResilientLoop(_step_fn, {"acc": 0.0, "steps": 0}, _Loader(),
+                         "train", ckpt_every=2, max_retries=2,
+                         store=JobStoreCheckpoints(store))
+    with pytest.raises(HostFailure):
+        loop.run(10, fail_at={4: 5})      # more failures than the budget
+    store.close()

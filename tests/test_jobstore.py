@@ -1,0 +1,303 @@
+"""Unit tests for the durable serving state layer (``repro.core.jobstore``):
+the job state machine (legal/illegal edges, event-log append-only-ness),
+the SQLite ``JobStore`` (persistence across connections, atomic
+transition+result, schema versioning), the ``MemoryJobStore`` fallback,
+and the SQLite ``ArtifactStore`` backend (incremental saves, corruption
+quarantine, factory dispatch). numpy-only — runs in the tier-1 CI tier.
+"""
+import os
+import sqlite3
+
+import pytest
+
+from repro.core import ipc_cache
+from repro.core.jobstore import (CANCELLED, FAILED, FINISHED, JOBSTORE_SCHEMA,
+                                 PAUSED, QUEUED, RUNNING, STATES,
+                                 TERMINAL_STATES, TRANSITIONS,
+                                 IllegalTransition, JobStore, JobStoreError,
+                                 MemoryJobStore, SqliteArtifactStore,
+                                 SqliteIPCCache, check_transition)
+
+
+# ------------------------------------------------------------------ #
+# state machine
+# ------------------------------------------------------------------ #
+def test_every_legal_edge_validates():
+    check_transition(None, QUEUED)
+    for frm, tos in TRANSITIONS.items():
+        for to in tos:
+            check_transition(frm, to)
+
+
+def test_every_illegal_edge_raises():
+    for frm in STATES:
+        for to in STATES:
+            if to in TRANSITIONS[frm]:
+                continue
+            with pytest.raises(IllegalTransition):
+                check_transition(frm, to)
+    # creation may only enter queued; unknown states always raise
+    with pytest.raises(IllegalTransition):
+        check_transition(None, RUNNING)
+    with pytest.raises(IllegalTransition):
+        check_transition(QUEUED, "warp-drive")
+    with pytest.raises(IllegalTransition):
+        check_transition("warp-drive", QUEUED)
+
+
+def test_terminal_states_have_no_exits():
+    for st in TERMINAL_STATES:
+        assert not TRANSITIONS[st]
+
+
+@pytest.fixture(params=["sqlite", "memory"])
+def jstore(request, tmp_path):
+    if request.param == "sqlite":
+        s = JobStore(str(tmp_path / "jobs.sqlite"))
+        yield s
+        s.close()
+    else:
+        yield MemoryJobStore()
+
+
+# ------------------------------------------------------------------ #
+# JobStore behavior (both implementations)
+# ------------------------------------------------------------------ #
+def test_job_lifecycle_and_event_log(jstore):
+    jstore.create_job("j", {"policy": "KERNELET", "n": 2})
+    assert jstore.state("j") == QUEUED
+    assert jstore.spec("j") == {"policy": "KERNELET", "n": 2}
+    jstore.transition("j", RUNNING, "dispatch")
+    jstore.transition("j", PAUSED, "preempted")
+    jstore.transition("j", RUNNING, "resumed")
+    jstore.transition("j", FINISHED, "drained", result={"total": 7.25})
+    assert jstore.state("j") == FINISHED
+    assert jstore.result("j") == {"total": 7.25}
+    edges = [(e[2], e[3]) for e in jstore.events("j")]
+    assert edges == [(None, QUEUED), (QUEUED, RUNNING), (RUNNING, PAUSED),
+                     (PAUSED, RUNNING), (RUNNING, FINISHED)]
+    # seq is strictly increasing (append-only log)
+    seqs = [e[0] for e in jstore.events("j")]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+
+
+def test_illegal_transition_rejected_and_not_logged(jstore):
+    jstore.create_job("j", {})
+    with pytest.raises(IllegalTransition):
+        jstore.transition("j", FINISHED)     # queued -> finished: no edge
+    assert jstore.state("j") == QUEUED
+    assert len(jstore.events("j")) == 1      # only the submission event
+
+
+def test_duplicate_and_unknown_jobs(jstore):
+    jstore.create_job("j", {})
+    with pytest.raises(JobStoreError):
+        jstore.create_job("j", {})
+    with pytest.raises(KeyError):
+        jstore.transition("nope", RUNNING)
+    assert jstore.state("nope") is None
+
+
+def test_crash_requeue_edge(jstore):
+    """running -> queued is the recovery edge; queued -> running again."""
+    jstore.create_job("j", {})
+    jstore.transition("j", RUNNING)
+    jstore.transition("j", QUEUED, "recovered")
+    jstore.transition("j", RUNNING)
+    jstore.transition("j", CANCELLED)
+    with pytest.raises(IllegalTransition):
+        jstore.transition("j", RUNNING)      # terminal: no exits
+
+
+def test_checkpoint_roundtrip_and_drop(jstore):
+    jstore.create_job("j", {})
+    assert jstore.load_checkpoint("j") is None
+    jstore.save_checkpoint("j", 3, {"total": 1.5, "log": [[1.0, "co:a+b"]]})
+    jstore.save_checkpoint("j", 5, {"total": 9.75})   # upsert wins
+    assert jstore.load_checkpoint("j") == (5, {"total": 9.75})
+    jstore.drop_checkpoint("j")
+    assert jstore.load_checkpoint("j") is None
+
+
+def test_jobs_listing_filters(jstore):
+    jstore.create_job("a", {})
+    jstore.create_job("b", {})
+    jstore.transition("a", RUNNING)
+    assert dict(jstore.jobs()) == {"a": RUNNING, "b": QUEUED}
+    assert jstore.jobs(QUEUED) == [("b", QUEUED)]
+
+
+# ------------------------------------------------------------------ #
+# SQLite JobStore specifics
+# ------------------------------------------------------------------ #
+def test_jobstore_persists_across_connections(tmp_path):
+    path = str(tmp_path / "jobs.sqlite")
+    s1 = JobStore(path)
+    s1.create_job("j", {"k": 1})
+    s1.transition("j", RUNNING)
+    s1.save_checkpoint("j", 2, {"total": 3.5})
+    s1.close()
+    s2 = JobStore(path)
+    assert s2.state("j") == RUNNING
+    assert s2.spec("j") == {"k": 1}
+    assert s2.load_checkpoint("j") == (2, {"total": 3.5})
+    assert len(s2.events("j")) == 2
+    s2.close()
+
+
+def test_jobstore_schema_mismatch_refuses(tmp_path):
+    path = str(tmp_path / "jobs.sqlite")
+    JobStore(path).close()
+    conn = sqlite3.connect(path)
+    conn.execute(f"PRAGMA user_version = {JOBSTORE_SCHEMA + 1}")
+    conn.close()
+    # durable state is not a cache: refuse loudly, don't start empty
+    with pytest.raises(JobStoreError):
+        JobStore(path)
+
+
+def test_jobstore_unwritable_location_raises(tmp_path):
+    blocker = tmp_path / "f"
+    blocker.write_text("x")
+    with pytest.raises(JobStoreError):
+        JobStore(str(blocker / "nope" / "jobs.sqlite"))
+
+
+def test_float_results_roundtrip_exactly(tmp_path):
+    s = JobStore(str(tmp_path / "jobs.sqlite"))
+    total = 123237026.63292399          # a real replay total
+    s.create_job("j", {})
+    s.transition("j", RUNNING)
+    s.transition("j", FINISHED, result={"total_cycles": total})
+    assert s.result("j")["total_cycles"] == total
+    s.close()
+
+
+# ------------------------------------------------------------------ #
+# SqliteArtifactStore backend
+# ------------------------------------------------------------------ #
+def test_sqlite_store_roundtrip_and_incremental_save(tmp_path):
+    s = SqliteArtifactStore("thing", ("a", "b"), schema=3,
+                            dirname=str(tmp_path))
+    s.put("a", "k", [1.5, 2.5])
+    s.put("b", "x", 7.0)
+    assert s._dirty
+    s.save()
+    assert not s._dirty and not s._fresh
+    s2 = SqliteArtifactStore("thing", ("a", "b"), schema=3,
+                             dirname=str(tmp_path))
+    assert s2.get("a", "k") == [1.5, 2.5] and s2.get("b", "x") == 7.0
+    # the second save upserts only the fresh entry; old rows survive
+    s2.put("a", "k2", 9.0)
+    assert set(s2._fresh) == {("a", "k2")}
+    s2.save()
+    s3 = SqliteArtifactStore("thing", ("a", "b"), schema=3,
+                             dirname=str(tmp_path))
+    assert s3.get("a", "k") == [1.5, 2.5] and s3.get("a", "k2") == 9.0
+
+
+def test_sqlite_store_two_writer_union(tmp_path):
+    a = SqliteArtifactStore("s", ("k",), schema=1, dirname=str(tmp_path))
+    b = SqliteArtifactStore("s", ("k",), schema=1, dirname=str(tmp_path))
+    a.put("k", "x", 1.0)
+    b.put("k", "y", 2.0)
+    a.save()
+    b.save()
+    c = SqliteArtifactStore("s", ("k",), schema=1, dirname=str(tmp_path))
+    assert c.get("k", "x") == 1.0 and c.get("k", "y") == 2.0
+
+
+def test_sqlite_store_corruption_quarantined(tmp_path):
+    s = SqliteArtifactStore("s", ("k",), schema=1, dirname=str(tmp_path))
+    s.put("k", "x", 1.0)
+    s.save()
+    with open(s.path, "wb") as f:
+        f.write(b"definitely not a sqlite file")
+    s2 = SqliteArtifactStore("s", ("k",), schema=1, dirname=str(tmp_path))
+    assert s2.get("k", "x") is None      # cache: empty, never an exception
+    s2.put("k", "x", 1.0)
+    s2.save()                            # heals
+    s3 = SqliteArtifactStore("s", ("k",), schema=1, dirname=str(tmp_path))
+    assert s3.get("k", "x") == 1.0
+
+
+def test_sqlite_store_embedded_schema_mismatch(tmp_path):
+    """A hand-copied file whose embedded user_version disagrees with the
+    file name's schema is rejected (same contract as the JSON backend)."""
+    s1 = SqliteArtifactStore("s", ("k",), schema=1, dirname=str(tmp_path))
+    s1.put("k", "x", 1.0)
+    s1.save()
+    s2 = SqliteArtifactStore("other", ("k",), schema=2, path=s1.path)
+    assert s2.get("k", "x") is None
+
+
+def test_sqlite_store_unwritable_degrades(tmp_path):
+    blocker = tmp_path / "f"
+    blocker.write_text("x")
+    s = SqliteArtifactStore("s", ("k",), schema=1,
+                            dirname=str(blocker / "nope"))
+    s.put("k", "x", 1.0)
+    s.save()                             # silently degrades
+    assert s._dirty                      # retryable
+    assert s.get("k", "x") == 1.0        # in-memory layer still serves
+    s.path = str(tmp_path / "s_v1.sqlite")
+    s.save()
+    assert not s._dirty
+    again = SqliteArtifactStore("s", ("k",), schema=1,
+                                dirname=str(tmp_path))
+    assert again.get("k", "x") == 1.0
+
+
+def test_sqlite_ipc_cache_typed_access(tmp_path):
+    from repro.core.profiles import C2050, KernelProfile
+    vg = C2050.virtual()
+    p = KernelProfile("K", rm=0.1, coal=1.0, insns_per_block=100.0,
+                      num_blocks=64, occupancy=1.0)
+    c = SqliteIPCCache(vg, 0, 600, path=str(tmp_path))
+    assert c.get("solo", [(p, 4)]) is None
+    c.put("solo", [(p, 4)], 0.75)
+    c.put("pair", [(p, 2), (p, 2)], (0.5, 0.25))
+    c.save()
+    c2 = SqliteIPCCache(vg, 0, 600, path=str(tmp_path))
+    assert c2.get("solo", [(p, 4)]) == 0.75
+    assert c2.get("pair", [(p, 2), (p, 2)]) == (0.5, 0.25)
+    # distinct identity -> distinct file
+    c3 = SqliteIPCCache(vg, 1, 600, path=str(tmp_path))
+    assert c3.get("solo", [(p, 4)]) is None
+
+
+# ------------------------------------------------------------------ #
+# factory dispatch + gc across backends
+# ------------------------------------------------------------------ #
+def test_open_store_backend_dispatch(tmp_path, monkeypatch):
+    monkeypatch.delenv(ipc_cache.ENV_BACKEND, raising=False)
+    s = ipc_cache.open_store("s", ("k",), schema=1, dirname=str(tmp_path))
+    assert type(s) is ipc_cache.ArtifactStore
+    monkeypatch.setenv(ipc_cache.ENV_BACKEND, "sqlite")
+    s = ipc_cache.open_store("s", ("k",), schema=1, dirname=str(tmp_path))
+    assert type(s) is SqliteArtifactStore
+    monkeypatch.setenv(ipc_cache.ENV_BACKEND, "bogus")
+    s = ipc_cache.open_store("s", ("k",), schema=1, dirname=str(tmp_path))
+    assert type(s) is ipc_cache.ArtifactStore   # unknown -> json, never fail
+    # explicit argument beats the env var
+    s = ipc_cache.open_store("s", ("k",), schema=1, dirname=str(tmp_path),
+                             backend="sqlite")
+    assert type(s) is SqliteArtifactStore
+
+
+def test_gc_collects_dead_sqlite_generations(tmp_path):
+    live = {"markov": 2}
+    dead = SqliteArtifactStore("markov_x", ("k",), schema=1,
+                               dirname=str(tmp_path))
+    dead.put("k", "a", 1.0)
+    dead.save()
+    keep = SqliteArtifactStore("markov_x", ("k",), schema=2,
+                               dirname=str(tmp_path))
+    keep.put("k", "a", 1.0)
+    keep.save()
+    # a stale -wal sidecar should go with its store file
+    open(dead.path + "-wal", "wb").close()
+    removed = ipc_cache.ArtifactStore.gc(live, dirname=str(tmp_path))
+    assert dead.path in removed and dead.path + "-wal" in removed
+    assert os.path.exists(keep.path)
+    assert not os.path.exists(dead.path)
