@@ -20,6 +20,10 @@ baseline would (the history's own consecutive same-box entries swing by
     incremental-SQLite-vs-JSON-rewrite store-write advantage at the
     1k-entry size; a ratio of two same-box timings, so it is robust to
     machine changes in a way the absolute-time lanes are not.
+  * ``fleet_hetero`` / ``lanes_per_s`` (higher is better) — warm
+    heterogeneous replay throughput at the tracked 1024-lane mixed-spec
+    fleet configuration: the digest-grouped charge pass falling back to
+    per-lane scalar work shows up here first.
 
 A lane fails when it is more than ``tolerance`` (default 25%,
 ``REPRO_BENCH_GATE_TOL``) worse than the baseline. Wall-clock probes are
@@ -49,7 +53,8 @@ import os
 import statistics
 import sys
 
-from benchmarks import daemon_recovery, decision_latency, replay_throughput
+from benchmarks import (daemon_recovery, decision_latency, fleet_hetero,
+                        replay_throughput)
 
 REPORT_PATH = os.path.join("artifacts", "bench", "perf_gate.json")
 
@@ -98,6 +103,12 @@ def _probe_sqlite_speedup() -> float:
     return float(daemon_recovery.bench_store_writes()["sqlite_speedup"])
 
 
+def _probe_fleet_hetero() -> float:
+    # the tracked history configuration, so the comparison is like-for-like
+    return float(fleet_hetero.bench(
+        lanes=1024, instances=512, rounds=1200)["lanes_per_s"])
+
+
 # (lane name, history path, metric, better, probe)
 LANES = (
     ("decision_latency", decision_latency.HISTORY_PATH,
@@ -106,6 +117,8 @@ LANES = (
      "lanes_per_s", "higher", _probe_replay),
     ("daemon_recovery", daemon_recovery.HISTORY_PATH,
      "sqlite_speedup", "higher", _probe_sqlite_speedup),
+    ("fleet_hetero", fleet_hetero.HISTORY_PATH,
+     "lanes_per_s", "higher", _probe_fleet_hetero),
 )
 
 

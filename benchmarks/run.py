@@ -28,8 +28,8 @@ def main() -> None:
 
     from benchmarks.paper_figs import ALL_FIGS
     from benchmarks import (arrival_latency, daemon_recovery,
-                            decision_latency, replay_throughput,
-                            tpu_coschedule)
+                            decision_latency, fleet_hetero,
+                            replay_throughput, tpu_coschedule)
 
     benches = dict(ALL_FIGS)
     benches["tpu_coschedule"] = tpu_coschedule.bench
@@ -37,6 +37,7 @@ def main() -> None:
     benches["replay_throughput"] = replay_throughput.bench
     benches["arrival_latency"] = arrival_latency.bench
     benches["daemon_recovery"] = daemon_recovery.bench
+    benches["fleet_hetero"] = fleet_hetero.bench
     if args.only:
         benches = {k: v for k, v in benches.items() if k == args.only}
 
@@ -55,6 +56,8 @@ def main() -> None:
             rec = fn(instances=4, rounds=500)
         elif args.fast and name == "daemon_recovery":
             rec = fn(rounds=300)
+        elif args.fast and name == "fleet_hetero":
+            rec = fn(lanes=64, instances=32, rounds=400)
         else:
             rec = fn()
         dt = time.time() - t0
@@ -70,6 +73,8 @@ def main() -> None:
                 arrival_latency.record_history(rec)
             elif name == "daemon_recovery":
                 daemon_recovery.record_history(rec)
+            elif name == "fleet_hetero":
+                fleet_hetero.record_history(rec)
         print(f"{name},{dt * 1e6:.0f},{_headline_str(rec)}")
 
 

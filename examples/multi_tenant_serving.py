@@ -10,6 +10,9 @@ cache, then the dispatcher executes with every decision a cache hit.
   PYTHONPATH=src python examples/multi_tenant_serving.py --fleet 4        # pure-simulation multi-pod replay (no jax)
   PYTHONPATH=src python examples/multi_tenant_serving.py --arrivals 1e-5  # arrival-timed replay: Poisson job
                                                                           # arrivals, queue-wait/SLO metrics (no jax)
+  PYTHONPATH=src python examples/multi_tenant_serving.py \
+      --pods v5e,v5e-2x --arrivals 1e-5                                   # mixed-pod fleet: per-pod GPUSpecs,
+                                                                          # speed-aware least-backlog dealing
 """
 import argparse
 import dataclasses
@@ -17,8 +20,26 @@ import sys
 import time
 
 
+def _pod_spec(token: str):
+    """Resolve a ``--pods`` token to a GPUSpec: ``v5e`` is the stock
+    TPU v5e pod; ``v5e-<k>x`` a generation with k times the cores (e.g.
+    ``v5e-2x``) — the mixed-pod capacity-planning knob."""
+    from repro.core.profiles import TPU_V5E
+    if token == "v5e":
+        return TPU_V5E
+    if token.startswith("v5e-") and token.endswith("x"):
+        k = int(token[len("v5e-"):-1])
+        if k < 1:
+            raise ValueError(f"pod scale must be >= 1: {token!r}")
+        return dataclasses.replace(TPU_V5E, name=f"TPUv5e-{k}x",
+                                   n_sm=TPU_V5E.n_sm * k)
+    raise ValueError(f"unknown pod spec {token!r}: expected 'v5e' or "
+                     "'v5e-<k>x'")
+
+
 def fleet_replay(n_pods: int, arrival_rate: float = 0.0,
-                 policy: str = "KERNELET", deal: str = "auto") -> None:
+                 policy: str = "KERNELET", deal: str = "auto",
+                 pods: str = "") -> None:
     """Replay the demo tenant mix over a simulated fleet of shared pods —
     one engine batch, one measurement service, one decision cache. Builds
     the tenant profiles analytically (compiled cost analysis is not needed
@@ -55,6 +76,10 @@ def fleet_replay(n_pods: int, arrival_rate: float = 0.0,
             prof, insns_per_block=1000.0, num_blocks=slices)
     truth = IPCTable(TPU_V5E.virtual(), rounds=1500, persist=False)
     order = [name for name, *_ in tenants]
+    pod_specs = None
+    if pods:
+        pod_specs = [_pod_spec(tok.strip()) for tok in pods.split(",")]
+        n_pods = len(pod_specs)
     arrivals = None
     slo = None
     if arrival_rate > 0:
@@ -64,14 +89,18 @@ def fleet_replay(n_pods: int, arrival_rate: float = 0.0,
     t0 = time.perf_counter()
     fleet = run_fleet(policy, profiles, order, TPU_V5E, truth, n_pods,
                       alpha_p=0.2, alpha_m=0.2, engine=engine,
-                      arrivals=arrivals, slo_deadline=slo, deal=deal)
+                      arrivals=arrivals, slo_deadline=slo, deal=deal,
+                      gpus=pod_specs)
     dt = time.perf_counter() - t0
-    print(f"fleet of {n_pods} pods ({policy}, {fleet.deal} dealing): "
+    mix = ("" if pod_specs is None
+           else " [" + ", ".join(s.name for s in fleet.gpus) + "]")
+    print(f"fleet of {n_pods} pods{mix} ({policy}, {fleet.deal} dealing): "
           f"makespan {fleet.makespan:.0f} cycles, "
           f"{fleet.n_coschedules} co-schedules, replay took {dt * 1e3:.1f}ms")
     for g, lane in enumerate(fleet.lanes):
         events = ", ".join(ev for _, ev in lane.time_line)
-        print(f"  pod{g}: {lane.total_cycles:.0f} cycles  [{events}]")
+        print(f"  pod{g} ({fleet.gpus[g].name}): "
+              f"{lane.total_cycles:.0f} cycles  [{events}]")
     if fleet.latency is not None:
         lat = fleet.latency
         print(f"arrival-timed (rate={arrival_rate:g}/cycle): "
@@ -108,10 +137,14 @@ if __name__ == "__main__":
                     choices=["auto", "round_robin", "least_backlog"],
                     help="fleet dealing policy (auto = least-predicted-"
                          "backlog under arrivals, round-robin otherwise)")
+    ap.add_argument("--pods", default="", metavar="SPEC,SPEC,...",
+                    help="mixed-pod fleet: comma-separated pod specs "
+                         "('v5e' or 'v5e-<k>x', e.g. v5e,v5e-2x); "
+                         "overrides --fleet's pod count")
     args = ap.parse_args()
-    if args.fleet or args.arrivals:
+    if args.fleet or args.arrivals or args.pods:
         fleet_replay(max(args.fleet, 1), arrival_rate=args.arrivals,
-                     policy=args.policy, deal=args.deal)
+                     policy=args.policy, deal=args.deal, pods=args.pods)
         sys.exit(0)
     from repro.launch.serve import demo
     demo()

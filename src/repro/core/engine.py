@@ -58,12 +58,13 @@ the t=0 == backlog pin holds with interpolation on.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.markov import MarkovModel
-from repro.core.profiles import GPUSpec, KernelProfile
+from repro.core.profiles import GPUSpec, KernelProfile, content_digest
 from repro.core.queue import WorkloadResult, _Pending, _solo_phase
 from repro.core.scheduler import KerneletScheduler
 from repro.core.simulator import IPCTable
@@ -111,10 +112,11 @@ class LaneSpec:
 
 @dataclasses.dataclass
 class FleetResult:
-    """A homogeneous multi-GPU replay: per-GPU lane results plus the fleet
-    aggregates (makespan = slowest GPU, the workload-throughput metric).
-    Arrival-timed fleets also carry the pooled latency metrics; ``deal``
-    names the dealing policy that split the stream."""
+    """A multi-GPU replay: per-GPU lane results plus the fleet aggregates
+    (makespan = slowest GPU, the workload-throughput metric). Arrival-timed
+    fleets also carry the pooled latency metrics; ``deal`` names the
+    dealing policy that split the stream and ``gpus`` the per-lane specs
+    (heterogeneous fleets: one entry per lane, parallel to ``lanes``)."""
     lanes: List[WorkloadResult]
     makespan: float
     total_cycles: float
@@ -122,6 +124,7 @@ class FleetResult:
     n_slices: float
     latency: Optional[dict] = None
     deal: str = "round_robin"
+    gpus: Optional[List[GPUSpec]] = None
 
 
 def aggregate_latency(results: Sequence[WorkloadResult],
@@ -231,9 +234,15 @@ class WorkloadEngine:
     def __init__(self):
         self._schedulers: Dict = {}
         # step/batch counters for benchmarks and docs (not part of results)
+        # table_groups: max distinct measurement-table contents seen in one
+        # step's lookup resolution — a heterogeneous fleet with K distinct
+        # GPUSpecs resolves in K batched sweeps, never per-lane scalars.
+        # charged: total charge-pass actions; charge_batches: vectorized
+        # passes that served them (the vectorization ratio benches assert).
         self.stats = {"steps": 0, "lanes": 0, "pair_lookups": 0,
                       "solo_lookups": 0, "decisions": 0,
-                      "admitted": 0, "idle_ffwd": 0}
+                      "admitted": 0, "idle_ffwd": 0,
+                      "table_groups": 0, "charged": 0, "charge_batches": 0}
 
     # ---- shared decision state ---- #
     def scheduler_for(self, gpu: GPUSpec,
@@ -397,26 +406,49 @@ class WorkloadEngine:
 
     # ---- measurement phase: batch all lanes' lookups per table ---- #
     def _resolve_lookups(self, actions: Sequence[_Action]) -> None:
-        pair_by_table: Dict[int, dict] = {}
-        solo_by_table: Dict[int, dict] = {}
-        tables: Dict[int, IPCTable] = {}
+        """Gather every lane's pending measurement lookups and resolve them
+        in one batched sweep per *table content* (``IPCTable.content_key``:
+        gpu digest, seed, rounds) — a heterogeneous fleet with K distinct
+        GPUSpecs costs K sweeps per step, not one per lane. Lanes that hold
+        content-identical but distinct table objects share the sweep: the
+        batch resolves into one representative and the others absorb its
+        in-memory entries (deterministic in the content key, so this is a
+        pure cache transfer)."""
+        pair_by_key: Dict[tuple, dict] = {}
+        solo_by_key: Dict[tuple, dict] = {}
+        tables: Dict[tuple, List[IPCTable]] = {}
         for a in actions:
             truth = a.lane.spec.truth
-            tables[id(truth)] = truth
+            ck = truth.content_key
+            group = tables.setdefault(ck, [])
+            if all(t is not truth for t in group):
+                group.append(truth)
             if a.kind == "co":
-                pair_by_table.setdefault(id(truth), {})[
+                pair_by_key.setdefault(ck, {})[
                     (a.p1, a.w1, a.p2, a.w2)] = None
             else:
                 w = (a.solo_w if a.solo_w is not None
                      else a.p1.active_units(truth.gpu))
-                solo_by_table.setdefault(id(truth), {})[(a.p1, w)] = None
+                solo_by_key.setdefault(ck, {})[(a.p1, w)] = None
+        self.stats["table_groups"] = max(self.stats["table_groups"],
+                                         len(tables))
         # dict-of-None keeps insertion order while deduping, so the batched
         # call measures each missing config exactly once
-        for tid, items in solo_by_table.items():
-            tables[tid].solo_many(list(items))
+        for ck, items in solo_by_key.items():
+            rep, *rest = tables[ck]
+            for t in rest:            # pool what siblings already measured
+                rep.absorb(t)
+            rep.solo_many(list(items))
+            for t in rest:
+                t.absorb(rep)
             self.stats["solo_lookups"] += len(items)
-        for tid, items in pair_by_table.items():
-            tables[tid].pair_many(list(items))
+        for ck, items in pair_by_key.items():
+            rep, *rest = tables[ck]
+            for t in rest:
+                rep.absorb(t)
+            rep.pair_many(list(items))
+            for t in rest:
+                t.absorb(rep)
             self.stats["pair_lookups"] += len(items)
 
     # ---- charge phase: vectorized co-exec / solo arithmetic ---- #
@@ -524,6 +556,8 @@ class WorkloadEngine:
         self._resolve_lookups(actions)
         co = [a for a in actions if a.kind == "co"]
         solo = [a for a in actions if a.kind == "solo"]
+        self.stats["charged"] += len(actions)
+        self.stats["charge_batches"] += (1 if co else 0) + (1 if solo else 0)
         if co:
             t, d1, d2, sl = self._charge_co(co)
             for j, a in enumerate(co):
@@ -570,15 +604,19 @@ class DealPolicy:
     """Assigns every entry of one arrival stream to a fleet GPU.
 
     ``assign`` returns one GPU index per ``order`` entry; ``run_fleet``
-    splits the stream accordingly. Subclass to plug in custom placement
-    (heterogeneous fleets, affinity, …)."""
+    splits the stream accordingly. ``gpus`` (one ``GPUSpec`` per fleet
+    lane, parallel to the GPU indices) is passed on heterogeneous fleets
+    so load-aware deals can weigh per-GPU speed; policies written before
+    it existed (``gpu`` only) keep working — ``run_fleet`` inspects the
+    signature. Subclass to plug in custom placement (affinity, …)."""
 
     name = "deal"
 
     def assign(self, order: Sequence[str],
                arrivals: Optional[Sequence[float]], n_gpus: int, *,
                profiles: Dict[str, KernelProfile],
-               gpu: GPUSpec) -> List[int]:
+               gpu: GPUSpec,
+               gpus: Optional[Sequence[GPUSpec]] = None) -> List[int]:
         raise NotImplementedError
 
 
@@ -590,54 +628,98 @@ class RoundRobinDeal(DealPolicy):
 
     name = "round_robin"
 
-    def assign(self, order, arrivals, n_gpus, *, profiles, gpu):
+    def assign(self, order, arrivals, n_gpus, *, profiles, gpu, gpus=None):
         return [i % n_gpus for i in range(len(order))]
+
+
+# (gpu digest, kernel name, profile digest) -> predicted solo service
+# cycles per instance. Module-level so repeated plan_fleet/assign calls —
+# and every LeastBacklogDeal instance — stay warm: the Markov solve and
+# _solo_phase arithmetic behind a prediction run once per content identity
+# per process, not once per assign() call.
+_SERVICE_MEMO: Dict[tuple, float] = {}
 
 
 class LeastBacklogDeal(DealPolicy):
     """Greedy least-predicted-backlog dealing: each arrival goes to the
     GPU with the smallest predicted outstanding work at its timestamp,
-    whose ledger is then charged the instance's predicted service time.
+    whose ledger is then charged the instance's predicted service time
+    *on that GPU* — on a heterogeneous fleet a fast pod's ledger grows
+    more slowly, so it correctly absorbs more of a skewed stream.
 
     The default predictor is a one-phase engine replay per kernel type —
     ``_solo_phase`` (the engine's own solo arithmetic) on the Markov
-    model's solo IPC, memoized per name — i.e. the measurement service
-    predicts the backlog, no real replay needed. Pass ``predictor``
-    (``name -> predicted cycles per instance``) to plug in a different
-    estimate (e.g. measured IPCs, or per-GPU speeds for mixed fleets)."""
+    model's solo IPC — computed per distinct ``GPUSpec`` and memoized
+    module-wide by (gpu digest, name, profile digest), so repeated
+    ``plan_fleet`` calls do zero extra Markov solves. Pass ``predictor``
+    to plug in a different estimate: either ``name -> cycles`` (applied
+    to every GPU) or ``(name, gpu_spec) -> cycles`` (per-GPU)."""
 
     name = "least_backlog"
 
     def __init__(self, predictor=None):
         self.predictor = predictor
 
-    def assign(self, order, arrivals, n_gpus, *, profiles, gpu):
-        pred = self.predictor
-        if pred is None:
-            vg = gpu.virtual()
-            model = MarkovModel(vg, three_state=True)
-            cache: Dict[str, float] = {}
+    @staticmethod
+    def _default_service(profiles: Dict[str, KernelProfile],
+                         spec: GPUSpec) -> Dict[str, float]:
+        """name -> memoized predicted solo service cycles on ``spec``."""
+        gd = content_digest(spec)
+        out, model, vg = {}, None, None
+        for n, p in profiles.items():
+            key = (gd, n, content_digest(p))
+            val = _SERVICE_MEMO.get(key)
+            if val is None:
+                if model is None:     # build the model only on a memo miss
+                    vg = spec.virtual()
+                    model = MarkovModel(vg, three_state=True)
+                ipc = model.single_ipc(p, p.active_units(vg))
+                val = _solo_phase(p, p.num_blocks, ipc, spec)[0]
+                _SERVICE_MEMO[key] = val
+            out[n] = val
+        return out
 
-            def pred(n):
-                if n not in cache:
-                    p = profiles[n]
-                    ipc = model.single_ipc(p, p.active_units(vg))
-                    cache[n] = _solo_phase(p, p.num_blocks, ipc, gpu)[0]
-                return cache[n]
+    def assign(self, order, arrivals, n_gpus, *, profiles, gpu, gpus=None):
+        specs = list(gpus) if gpus is not None else [gpu] * n_gpus
+        if len(specs) != n_gpus:
+            raise ValueError("gpus must carry one GPUSpec per fleet lane")
+        user = self.predictor
+        if user is not None:
+            pos = [p for p in inspect.signature(user).parameters.values()
+                   if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD,
+                                 p.VAR_POSITIONAL)]
+            per_gpu = (len(pos) >= 2
+                       or any(p.kind is p.VAR_POSITIONAL for p in pos))
+
+            def pred(n, g):
+                return user(n, specs[g]) if per_gpu else user(n)
+        else:
+            by_digest: Dict[str, Dict[str, float]] = {}
+            lane_svc = []
+            for s in specs:
+                d = content_digest(s)
+                if d not in by_digest:
+                    by_digest[d] = self._default_service(profiles, s)
+                lane_svc.append(by_digest[d])
+
+            def pred(n, g):
+                return lane_svc[g][n]
 
         ts = arrivals if arrivals is not None else [0.0] * len(order)
-        busy = [0.0] * n_gpus
+        busy = np.zeros(n_gpus, dtype=np.float64)
         out = [0] * len(order)
         # greedy pass in arrival-time order (stable on ties, matching
         # _Pending's admission sort): the stream API accepts unsorted
         # timestamps everywhere else, and charging the ledgers out of
-        # time order would make the backlog prediction arbitrary
+        # time order would make the backlog prediction arbitrary.
+        # argmin returns the first index among equal minima — the same
+        # lowest-index tie-break as the scalar min((backlog, k)) it
+        # replaces, vectorized so thousand-lane fleets deal in one pass.
         for i in sorted(range(len(order)), key=lambda j: (ts[j], j)):
             t, n = ts[i], order[i]
-            g = min(range(n_gpus),
-                    key=lambda k: (max(busy[k] - t, 0.0), k))
+            g = int(np.argmin(np.maximum(busy - t, 0.0)))
             out[i] = g
-            busy[g] = max(busy[g], t) + pred(n)
+            busy[g] = max(busy[g], t) + pred(n, g)
         return out
 
 
@@ -661,46 +743,130 @@ def resolve_deal(deal: Union[str, DealPolicy],
                          "DealPolicy instance") from None
 
 
+def _fleet_gpus(gpu, n_gpus, gpus) -> List[GPUSpec]:
+    """Resolve the fleet's per-lane specs. ``gpus`` (or a sequence passed
+    as ``gpu``) makes the fleet heterogeneous; a scalar ``gpu`` is the
+    compat alias expanding to ``n_gpus`` copies."""
+    if gpus is None and not isinstance(gpu, GPUSpec):
+        gpu, gpus = None, gpu                 # sequence in the gpu slot
+    if gpus is not None:
+        if gpu is not None and not isinstance(gpu, GPUSpec):
+            raise ValueError("pass per-lane specs either positionally or "
+                             "as gpus=, not both")
+        specs = list(gpus)
+        if not specs:
+            raise ValueError("gpus must be non-empty")
+        if not all(isinstance(s, GPUSpec) for s in specs):
+            raise ValueError("gpus must be a sequence of GPUSpec")
+        if n_gpus is not None and n_gpus != len(specs):
+            raise ValueError(f"n_gpus={n_gpus} but {len(specs)} gpus given")
+        return specs
+    if n_gpus is None:
+        raise ValueError("n_gpus is required with a scalar gpu")
+    if n_gpus < 1:
+        raise ValueError("n_gpus must be >= 1")
+    return [gpu] * n_gpus
+
+
+def _fleet_tables(specs: Sequence[GPUSpec],
+                  truth: IPCTable) -> List[IPCTable]:
+    """One shared measurement table per *distinct* spec content: lanes on
+    equal specs share one ``IPCTable`` object, so the engine's per-content
+    lookup batching sweeps each distinct GPU's physics exactly once per
+    step. ``truth`` serves specs whose virtual GPU matches its content
+    (the homogeneous fleet keeps sharing it verbatim — the FLEET_GOLDEN
+    contract) and acts as the seed/rounds/persistence template for the
+    tables the other specs get."""
+    tables = {truth.content_key: truth}
+    out = []
+    for s in specs:
+        key = (content_digest(s.virtual()), truth.seed, truth.rounds)
+        tbl = tables.get(key)
+        if tbl is None:
+            tbl = IPCTable(s.virtual(), seed=truth.seed,
+                           rounds=truth.rounds, persist=truth.persisted)
+            tables[key] = tbl
+        out.append(tbl)
+    return out
+
+
 def run_fleet(policy: str, profiles: Dict[str, KernelProfile],
-              order: List[str], gpu: GPUSpec, truth: IPCTable,
-              n_gpus: int, *, alpha_p: float = 0.4, alpha_m: float = 0.1,
+              order: List[str],
+              gpu: Union[GPUSpec, Sequence[GPUSpec]], truth: IPCTable,
+              n_gpus: Optional[int] = None, *,
+              alpha_p: float = 0.4, alpha_m: float = 0.1,
               cp_margin: Optional[float] = None, seed: int = 0,
               engine: Optional[WorkloadEngine] = None,
               arrivals: Optional[Sequence[float]] = None,
               slo_deadline: Optional[float] = None,
               deadlines: Optional[Sequence[float]] = None,
               interpolate: bool = True,
-              deal: Union[str, DealPolicy] = "auto") -> FleetResult:
-    """Replay one arrival stream over a homogeneous fleet of ``n_gpus``
-    GPUs: the stream is split by ``deal`` (see ``resolve_deal`` —
-    round-robin in backlog mode, least-predicted-backlog under arrivals,
-    or any ``DealPolicy`` instance), every lane shares ``truth`` (one
-    measurement service) and, via the engine, one scheduler decision
-    cache. The fleet makespan — the slowest GPU's total — is the workload
-    metric.
+              deal: Union[str, DealPolicy] = "auto",
+              gpus: Optional[Sequence[GPUSpec]] = None) -> FleetResult:
+    """Replay one arrival stream over a fleet of GPUs: the stream is split
+    by ``deal`` (see ``resolve_deal`` — round-robin in backlog mode,
+    least-predicted-backlog under arrivals, or any ``DealPolicy``
+    instance) and, via the engine, every lane shares one scheduler
+    decision cache per decision identity. The fleet makespan — the
+    slowest GPU's total — is the workload metric.
+
+    Homogeneous fleets pass a scalar ``gpu`` plus ``n_gpus``; every lane
+    then shares ``truth`` (one measurement service), exactly the
+    pre-heterogeneity behavior. Heterogeneous fleets pass ``gpus`` (or a
+    ``GPUSpec`` sequence in the ``gpu`` slot): lane g runs on ``gpus[g]``
+    with one shared ``IPCTable`` per *distinct* spec content —
+    ``truth`` serves matching specs and is the seed/rounds/persistence
+    template for the rest — and the engine still charges all lanes in one
+    vectorized pass per step (lookups batch per distinct table content).
+
+    Lanes that deal zero instances (``n_gpus > len(order)``) replay empty:
+    their ``total_cycles`` is 0.0 (they never bind the makespan) and they
+    contribute no completions to the pooled latency metrics.
 
     With ``arrivals`` (timestamps parallel to ``order``, dealt with it)
     every lane replays arrival-timed, and the result additionally carries
     the pooled latency metrics (p50/p95 wait, and SLO attainment when
     ``slo_deadline`` is given). ``deadlines`` (absolute, parallel to
-    ``order``) feed EDF-KERNELET lanes per-instance deadlines."""
+    ``order``) feed EDF-KERNELET lanes per-instance deadlines.
+
+    MC lanes draw from per-lane streams spawned via
+    ``np.random.SeedSequence(seed).spawn``, so no two (seed, lane) pairs
+    can collide the way the old ``seed + g`` derivation did."""
+    lane_gpus = _fleet_gpus(gpu, n_gpus, gpus)
+    n_gpus = len(lane_gpus)
     if n_gpus < 1:
         raise ValueError("n_gpus must be >= 1")
     if arrivals is not None and len(arrivals) != len(order):
         raise ValueError("arrivals must parallel order")
     if deadlines is not None and len(deadlines) != len(order):
         raise ValueError("deadlines must parallel order")
+    homogeneous = all(s == lane_gpus[0] for s in lane_gpus)
+    lane_tables = ([truth] * n_gpus
+                   if homogeneous and isinstance(gpu, GPUSpec)
+                   and lane_gpus[0] == gpu
+                   else _fleet_tables(lane_gpus, truth))
     dealer = resolve_deal(deal, arrivals)
-    assign = dealer.assign(order, arrivals, n_gpus,
-                           profiles=profiles, gpu=gpu)
+    deal_kwargs = {"profiles": profiles, "gpu": lane_gpus[0]}
+    deal_params = inspect.signature(dealer.assign).parameters
+    if ("gpus" in deal_params
+            or any(p.kind is p.VAR_KEYWORD for p in deal_params.values())):
+        deal_kwargs["gpus"] = tuple(lane_gpus)
+    assign = dealer.assign(order, arrivals, n_gpus, **deal_kwargs)
     parts = [[] for _ in range(n_gpus)]      # per-GPU entry indices
     for i, g in enumerate(assign):
         parts[g].append(i)
     eng = engine if engine is not None else WorkloadEngine()
+    # collision-free per-lane MC streams: seed=0/lane 1 and seed=1/lane 0
+    # must never share a generator state (the old ``seed + g`` bug)
+    mc_rngs = ([np.random.default_rng(c) for c in
+                np.random.SeedSequence(seed).spawn(n_gpus)]
+               if policy == "MC" else [None] * n_gpus)
     specs = [LaneSpec(policy=policy, profiles=profiles,
-                      order=[order[i] for i in part], gpu=gpu, truth=truth,
+                      order=[order[i] for i in part], gpu=lane_gpus[g],
+                      truth=lane_tables[g],
                       alpha_p=alpha_p, alpha_m=alpha_m,
-                      cp_margin=cp_margin, seed=seed + g, label=f"gpu{g}",
+                      cp_margin=cp_margin, seed=seed,
+                      mc_rng=mc_rngs[g], label=f"gpu{g}",
                       arrivals=(None if arrivals is None
                                 else [arrivals[i] for i in part]),
                       slo_deadline=slo_deadline,
@@ -711,10 +877,12 @@ def run_fleet(policy: str, profiles: Dict[str, KernelProfile],
     results = eng.run(specs)
     return FleetResult(
         lanes=results,
-        makespan=float(max(r.total_cycles for r in results)),
+        makespan=float(max((r.total_cycles for r in results),
+                           default=0.0)),
         total_cycles=float(sum(r.total_cycles for r in results)),
         n_coschedules=sum(r.n_coschedules for r in results),
         n_slices=float(sum(r.n_slices for r in results)),
         latency=(aggregate_latency(results, slo_deadline)
                  if arrivals is not None else None),
-        deal=dealer.name)
+        deal=dealer.name,
+        gpus=list(lane_gpus))

@@ -40,7 +40,7 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.profiles import GPUSpec, KernelProfile
+from repro.core.profiles import GPUSpec, KernelProfile, content_digest
 from repro.core import ipc_cache
 
 ENV_SWEEP_WORKERS = "REPRO_SWEEP_WORKERS"
@@ -496,6 +496,32 @@ class IPCTable:
         self._pair = {}
         self._store = (ipc_cache.open_ipc_cache(gpu, seed, rounds)
                        if persist else None)
+
+    @property
+    def content_key(self) -> tuple:
+        """This table's measurement identity: (gpu content digest, seed,
+        rounds). Two tables with equal keys return bit-identical values
+        for every query — what lets the engine batch lookups per content
+        across a heterogeneous fleet, and ``run_fleet`` share one table
+        object per distinct GPUSpec."""
+        return (content_digest(self.gpu), self.seed, self.rounds)
+
+    @property
+    def persisted(self) -> bool:
+        """Whether this table writes through to the on-disk store."""
+        return self._store is not None
+
+    def absorb(self, other: "IPCTable") -> None:
+        """Copy a content-identical table's in-memory measurements into
+        this one. Values are deterministic in ``content_key``, so this is
+        a pure cache transfer; absorbing a different content is an error
+        (it would serve another GPU's physics)."""
+        if other.content_key != self.content_key:
+            raise ValueError(
+                f"cannot absorb table {other.content_key} into "
+                f"{self.content_key}: measurement contents differ")
+        self._solo.update(other._solo)
+        self._pair.update(other._pair)
 
     # ---- persistent-store plumbing ---- #
     def _store_get(self, kind, prof_ws):

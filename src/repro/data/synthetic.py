@@ -64,6 +64,11 @@ def make_skewed_workload(names, instances: int = 10, gap: float = 1.0,
     arrivals)`` like ``make_timed_workload``."""
     if instances < 0:
         raise ValueError("instances must be >= 0")
+    if not names and instances > 0:
+        # fail loudly instead of the modulo-by-zero a caller would get:
+        # an empty stream is requested with instances=0, never with no
+        # kernel names (fleet benches build these streams from config)
+        raise ValueError("names must be non-empty when instances > 0")
     order = [names[i % len(names)] for i in range(instances * len(names))]
     arrivals = [start + i * float(gap) for i in range(len(order))]
     return order, arrivals

@@ -164,7 +164,8 @@ class SharedPodServer:
                 "completions": res.completions}
 
     def plan_fleet(self, n_pods: int, rate: float, *,
-                   seed: int = 0, slo_deadline: Optional[float] = None,
+                   pod_specs=None, seed: int = 0,
+                   slo_deadline: Optional[float] = None,
                    rounds: int = 1500, policy: str = "KERNELET",
                    deal="auto") -> dict:
         """Fleet-dealing plan: replays the pending jobs' Poisson stream
@@ -172,11 +173,23 @@ class SharedPodServer:
         with ``deal`` (``"auto"`` = least-predicted-backlog under
         arrivals — see ``repro.core.engine.DealPolicy``). Returns the
         pooled latency prediction plus the per-pod split, so capacity
-        planning can compare dealing policies before committing pods."""
+        planning can compare dealing policies before committing pods.
+
+        ``pod_specs`` (one ``GPUSpec`` per pod) plans a *mixed-pod* fleet:
+        pod g replays on ``pod_specs[g]`` with its own measurement table
+        (one per distinct spec content — the server's plan table serves
+        matching pods and templates the rest), and the load-aware deal
+        weighs per-pod speed, so capacity planning can ask what adding a
+        faster or slower pod generation buys before committing it."""
         order = [n for n, j in self.jobs.items() if j.num_slices > 0]
         if not order:
             return {"predicted_makespan_cycles": 0.0, "latency": {},
-                    "per_pod": [], "deal": None}
+                    "per_pod": [], "pods": [], "deal": None}
+        if pod_specs is not None:
+            pod_specs = list(pod_specs)
+            if len(pod_specs) != n_pods:
+                raise ValueError(f"n_pods={n_pods} but {len(pod_specs)} "
+                                 "pod_specs given")
         if self._plan_truth is None:
             self._plan_truth = IPCTable(self.spec.virtual(), rounds=rounds,
                                         persist=False)
@@ -184,11 +197,13 @@ class SharedPodServer:
         fleet = run_fleet(policy, self.profiles, order, self.spec,
                           self._plan_truth, n_pods, alpha_p=0.2,
                           alpha_m=0.2, cp_margin=0.0, arrivals=arrivals,
-                          slo_deadline=slo_deadline, deal=deal)
+                          slo_deadline=slo_deadline, deal=deal,
+                          gpus=pod_specs)
         return {"predicted_makespan_cycles": float(fleet.makespan),
                 "latency": fleet.latency,
                 "per_pod": [[n for n, _, _ in lane.completions]
                             for lane in fleet.lanes],
+                "pods": [s.name for s in fleet.gpus],
                 "deal": fleet.deal,
                 "policy": policy}
 
