@@ -24,6 +24,10 @@ baseline would (the history's own consecutive same-box entries swing by
     heterogeneous replay throughput at the tracked 1024-lane mixed-spec
     fleet configuration: the digest-grouped charge pass falling back to
     per-lane scalar work shows up here first.
+  * ``pod_fleet`` / ``steal_jobs_per_s`` (higher is better) — multi-pod
+    fleet drain throughput at the tracked 12-job/3-pod configuration:
+    the lease acquisition gate, the ``data_version`` monitor loop, and
+    the SQLITE_BUSY retry path all sit under this number.
 
 A lane fails when it is more than ``tolerance`` (default 25%,
 ``REPRO_BENCH_GATE_TOL``) worse than the baseline. Wall-clock probes are
@@ -54,7 +58,7 @@ import statistics
 import sys
 
 from benchmarks import (daemon_recovery, decision_latency, fleet_hetero,
-                        replay_throughput)
+                        pod_fleet, replay_throughput)
 
 REPORT_PATH = os.path.join("artifacts", "bench", "perf_gate.json")
 
@@ -109,6 +113,11 @@ def _probe_fleet_hetero() -> float:
         lanes=1024, instances=512, rounds=1200)["lanes_per_s"])
 
 
+def _probe_pod_fleet() -> float:
+    # the tracked history configuration, so the comparison is like-for-like
+    return float(pod_fleet.bench_steal_throughput()["steal_jobs_per_s"])
+
+
 # (lane name, history path, metric, better, probe)
 LANES = (
     ("decision_latency", decision_latency.HISTORY_PATH,
@@ -119,6 +128,8 @@ LANES = (
      "sqlite_speedup", "higher", _probe_sqlite_speedup),
     ("fleet_hetero", fleet_hetero.HISTORY_PATH,
      "lanes_per_s", "higher", _probe_fleet_hetero),
+    ("pod_fleet", pod_fleet.HISTORY_PATH,
+     "steal_jobs_per_s", "higher", _probe_pod_fleet),
 )
 
 

@@ -1,0 +1,224 @@
+"""Pod-fleet bench: what does failover cost, and what does stealing buy?
+
+This PR made the serving path multi-pod: N daemons over one SQLite
+store, coordinated by leases with fencing epochs, with work-stealing
+and crash-requeue of expired leases. This bench pins the operational
+claims with numbers so they cannot rot silently:
+
+  * ``steal_jobs_per_s`` — fleet drain throughput over ``n_jobs``
+    queued replay jobs with ``n_pods`` pods stealing from the shared
+    queue (jobs / fleet wall time). The perf-gate lane: the lease gate,
+    the ``data_version`` monitor loop, and the busy-retry path all sit
+    on this number, so a regression in any of them shows up here first.
+  * ``time_to_failover_s`` — wall time from a pod dying mid-phase
+    (lease left dangling) to a surviving pod requeueing the expired
+    lease. Dominated by ``lease_ttl_s`` + one monitor-loop wakeup;
+    recorded so TTL/backoff tuning has a trajectory.
+  * ``fleet_speedup`` — single-pod wall time / fleet wall time for the
+    same job set (informational: pods are threads sharing the GIL, so
+    this hovers near 1x; the fleet buys fault tolerance, not compute).
+  * ``equivalent`` — pooled fleet results, including the kill/failover
+    run, are bit-identical per job to the uninterrupted single-pod
+    drain (recorded AND asserted: fast failover to a wrong answer is
+    not failover).
+
+History grows at ``benchmarks/history/pod_fleet.jsonl`` (validated by
+the shared ``history_schema`` in CI smoke); the perf gate tracks
+``steal_jobs_per_s`` (higher is better). Run directly
+(``python -m benchmarks.pod_fleet [--smoke]``) or via
+``benchmarks.run``. numpy-only: no jax import chain.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+from benchmarks import history_schema
+from repro.runtime.chaos import PodChaos, finished_exactly_once, \
+    results_equal
+from repro.runtime.daemon import ServingDaemon
+from repro.runtime.fleet_daemon import PodFleet
+
+HISTORY_PATH = os.path.join("benchmarks", "history", "pod_fleet.jsonl")
+
+REQUIRED_FIELDS = (
+    "n_jobs", "n_pods", "rounds", "lease_ttl_s", "single_pod_s",
+    "fleet_s", "fleet_speedup", "steal_jobs_per_s",
+    "time_to_failover_s", "equivalent",
+)
+
+DELTA_KEYS = ("fleet_s", "steal_jobs_per_s", "time_to_failover_s")
+
+# tracked configuration: the gate compares like-for-like
+N_JOBS = 12
+N_PODS = 3
+ROUNDS = 300
+LEASE_TTL = 0.3
+
+PROFILES = {
+    "A": {"name": "A", "rm": 0.2, "coal": 1.0,
+          "insns_per_block": 9.0e4, "num_blocks": 64, "occupancy": 1.0},
+    "B": {"name": "B", "rm": 0.8, "coal": 0.6,
+          "insns_per_block": 1.1e5, "num_blocks": 64, "occupancy": 1.0},
+    "C": {"name": "C", "rm": 0.5, "coal": 0.8,
+          "insns_per_block": 8.0e4, "num_blocks": 48, "occupancy": 0.75},
+    "D": {"name": "D", "rm": 0.35, "coal": 0.9,
+          "insns_per_block": 1.0e5, "num_blocks": 56, "occupancy": 1.0},
+}
+
+
+def _jobs(n: int, rounds: int) -> dict:
+    order = ["A", "B", "C", "D", "A", "B"]
+    return {f"j{i}": {"policy": "KERNELET", "profiles": PROFILES,
+                      "order": order, "gpu": "C2050", "rounds": rounds,
+                      "table_seed": 0, "persist": False,
+                      "alpha_p": 0.4, "alpha_m": 0.1}
+            for i in range(n)}
+
+
+def _reference(tmp: str, jobs: dict) -> tuple:
+    """Uninterrupted single-pod drain: the equivalence oracle and the
+    fleet-speedup denominator."""
+    ref = ServingDaemon(os.path.join(tmp, "ref.sqlite"))
+    for jid, spec in jobs.items():
+        ref.submit(jid, spec)
+    t0 = time.perf_counter()
+    ref.run_until_idle()
+    wall = time.perf_counter() - t0
+    results = {jid: ref.store.result(jid) for jid in jobs}
+    ref.close()
+    return wall, results
+
+
+def _fleet_matches(fleet: PodFleet, jobs: dict,
+                   ref_results: dict) -> bool:
+    store = fleet.open_store()
+    try:
+        finished_exactly_once(store, jobs)
+        return all(not results_equal(store.result(jid),
+                                     ref_results[jid])
+                   for jid in jobs)
+    finally:
+        store.close()
+
+
+# ------------------------------------------------------------------ #
+# steal throughput: N pods draining one shared queue
+# ------------------------------------------------------------------ #
+def bench_steal_throughput(n_jobs: int = N_JOBS, n_pods: int = N_PODS,
+                           rounds: int = ROUNDS) -> dict:
+    jobs = _jobs(n_jobs, rounds)
+    with tempfile.TemporaryDirectory() as tmp:
+        single_pod_s, ref_results = _reference(tmp, jobs)
+
+        fleet = PodFleet(os.path.join(tmp, "fleet.sqlite"),
+                         n_pods=n_pods, lease_ttl=5.0, poll_s=0.005)
+        for jid, spec in jobs.items():
+            fleet.submit(jid, spec)
+        t0 = time.perf_counter()
+        fleet.run(timeout_s=300.0)
+        fleet_s = time.perf_counter() - t0
+        equivalent = _fleet_matches(fleet, jobs, ref_results)
+        fleet.close()
+    return {
+        "n_jobs": n_jobs, "n_pods": n_pods, "rounds": rounds,
+        "single_pod_s": round(single_pod_s, 4),
+        "fleet_s": round(fleet_s, 4),
+        "fleet_speedup": round(single_pod_s / max(fleet_s, 1e-9), 3),
+        "steal_jobs_per_s": round(n_jobs / max(fleet_s, 1e-9), 2),
+        "equivalent": equivalent,
+    }
+
+
+# ------------------------------------------------------------------ #
+# time to failover: kill a pod mid-phase, clock the crash-requeue
+# ------------------------------------------------------------------ #
+def bench_failover(n_jobs: int = 4, n_pods: int = N_PODS,
+                   rounds: int = ROUNDS,
+                   lease_ttl: float = LEASE_TTL) -> dict:
+    jobs = _jobs(n_jobs, rounds)
+    with tempfile.TemporaryDirectory() as tmp:
+        _, ref_results = _reference(tmp, jobs)
+
+        chaos = [PodChaos(kill_after_phases=1)] \
+            + [PodChaos() for _ in range(n_pods - 1)]
+        fleet = PodFleet(os.path.join(tmp, "failover.sqlite"),
+                         n_pods=n_pods, lease_ttl=lease_ttl,
+                         ckpt_every=1, poll_s=0.005, chaos=chaos)
+        for jid, spec in jobs.items():
+            fleet.submit(jid, spec)
+        fleet.run(timeout_s=300.0)
+        equivalent = _fleet_matches(fleet, jobs, ref_results)
+
+        killed_at = min((t for t, _, kind, _ in fleet.journal
+                         if kind == "killed"), default=None)
+        assert killed_at is not None, "kill schedule never fired"
+        requeued_at = min((t for t, _, kind, _ in fleet.journal
+                           if kind == "requeue" and t >= killed_at),
+                          default=None)
+        assert requeued_at is not None, \
+            "expired lease was never requeued"
+        fleet.close()
+    return {
+        "lease_ttl_s": lease_ttl,
+        "time_to_failover_s": round(requeued_at - killed_at, 4),
+        "failover_equivalent": equivalent,
+    }
+
+
+def bench(n_jobs: int = N_JOBS, n_pods: int = N_PODS,
+          rounds: int = ROUNDS) -> dict:
+    rec = bench_steal_throughput(n_jobs=n_jobs, n_pods=n_pods,
+                                 rounds=rounds)
+    fo = bench_failover(n_pods=n_pods, rounds=rounds)
+    rec["equivalent"] = bool(rec["equivalent"]
+                             and fo.pop("failover_equivalent"))
+    rec.update(fo)
+    assert rec["equivalent"], \
+        "fleet results diverged from the uninterrupted single-pod run"
+    rec["headline"] = {
+        "steal_jobs_per_s": rec["steal_jobs_per_s"],
+        "time_to_failover_s": rec["time_to_failover_s"],
+        "fleet_speedup": rec["fleet_speedup"],
+        "equivalent": rec["equivalent"],
+        "claim": f"{n_pods} pods steal from one shared queue at "
+                 f"{rec['steal_jobs_per_s']} jobs/s; a killed pod's "
+                 f"work is requeued in {rec['time_to_failover_s']}s "
+                 f"(TTL {rec['lease_ttl_s']}s), bit-identical results",
+    }
+    return rec
+
+
+def validate_record(rec: dict) -> None:
+    history_schema.validate_record(rec, REQUIRED_FIELDS, "pod_fleet")
+
+
+def validate_history(path: str = HISTORY_PATH) -> int:
+    return history_schema.validate_history(path, REQUIRED_FIELDS)
+
+
+def record_history(rec: dict, path: str = HISTORY_PATH) -> dict:
+    return history_schema.record_history(rec, path, DELTA_KEYS)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced jobs/rounds; validate record + "
+                         "history schema instead of appending")
+    args = ap.parse_args()
+    if args.smoke:
+        rec = bench(n_jobs=6, rounds=200)
+        validate_record(rec)
+        n = validate_history()
+        print(json.dumps(rec["headline"], indent=1))
+        print(f"smoke OK: record schema valid, {n} history entries "
+              "valid")
+    else:
+        rec = bench()
+        validate_record(rec)
+        record_history(rec)
+        print(json.dumps(rec, indent=1))

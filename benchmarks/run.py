@@ -28,7 +28,7 @@ def main() -> None:
 
     from benchmarks.paper_figs import ALL_FIGS
     from benchmarks import (arrival_latency, daemon_recovery,
-                            decision_latency, fleet_hetero,
+                            decision_latency, fleet_hetero, pod_fleet,
                             replay_throughput, tpu_coschedule)
 
     benches = dict(ALL_FIGS)
@@ -38,6 +38,7 @@ def main() -> None:
     benches["arrival_latency"] = arrival_latency.bench
     benches["daemon_recovery"] = daemon_recovery.bench
     benches["fleet_hetero"] = fleet_hetero.bench
+    benches["pod_fleet"] = pod_fleet.bench
     if args.only:
         benches = {k: v for k, v in benches.items() if k == args.only}
 
@@ -58,6 +59,8 @@ def main() -> None:
             rec = fn(rounds=300)
         elif args.fast and name == "fleet_hetero":
             rec = fn(lanes=64, instances=32, rounds=400)
+        elif args.fast and name == "pod_fleet":
+            rec = fn(n_jobs=6, rounds=200)
         else:
             rec = fn()
         dt = time.time() - t0
@@ -75,6 +78,8 @@ def main() -> None:
                 daemon_recovery.record_history(rec)
             elif name == "fleet_hetero":
                 fleet_hetero.record_history(rec)
+            elif name == "pod_fleet":
+                pod_fleet.record_history(rec)
         print(f"{name},{dt * 1e6:.0f},{_headline_str(rec)}")
 
 

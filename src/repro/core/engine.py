@@ -175,13 +175,18 @@ class _Lane:
                               completions=self.pend.completions)
 
     # ---- checkpoint serialization (daemon phase-boundary snapshots) ---- #
-    def state_json(self) -> dict:
+    def state_json(self, fence=None) -> dict:
         """Everything mutable as JSON-safe types: progress counters, event
         log, the full ``_Pending`` ledger, and (MC lanes) the exact RNG
         state — restoring replays the identical IEEE-754 sequence, which
         is what makes kill/restart bit-identical to an uninterrupted run.
         ``spec``/``sched``/``cap_at`` are code- or controller-side and are
-        rebuilt by the restorer, not checkpointed."""
+        rebuilt by the restorer, not checkpointed.
+
+        ``fence=(pod_id, epoch)`` embeds lease provenance: which holder,
+        at which fencing epoch, wrote this snapshot. The store rejects a
+        stale holder's write outright (``StaleLease``); the embedded copy
+        makes surviving checkpoints auditable after a failover."""
         st = {
             "total": float(self.total),
             "n_cos": int(self.n_cos),
@@ -189,11 +194,16 @@ class _Lane:
             "log": [[float(t), e] for t, e in self.log],
             "pend": self.pend.to_json(),
         }
+        if fence is not None:
+            st["fence"] = [str(fence[0]), int(fence[1])]
         if self.rng is not None:
             st["rng"] = self.rng.bit_generator.state
         return st
 
-    def load_state(self, st: dict) -> None:
+    def load_state(self, st: dict):
+        """Restore a ``state_json`` snapshot; returns the embedded fence
+        provenance ``(pod_id, epoch)`` (or ``None``) for audit — it has
+        no effect on the replayed state."""
         self.total = float(st["total"])
         self.n_cos = int(st["n_cos"])
         self.n_slices = float(st["n_slices"])
@@ -201,6 +211,8 @@ class _Lane:
         self.pend = _Pending.from_json(self.spec.profiles, st["pend"])
         if self.rng is not None and "rng" in st:
             self.rng.bit_generator.state = st["rng"]
+        f = st.get("fence")
+        return None if f is None else (str(f[0]), int(f[1]))
 
 
 # one decision per lane per step; co-exec and solo phases are charged in

@@ -32,6 +32,8 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core.engine import LaneSpec, WorkloadEngine, run_fleet
+from repro.core.jobstore import (CANCELLED, FINISHED, PAUSED, QUEUED,
+                                 RUNNING, JobStoreError, StaleLease)
 from repro.core.markov import MarkovModel
 from repro.core.profiles import TPU_V5E, KernelProfile, tpu_profile_from_costs
 from repro.core.simulator import IPCTable
@@ -207,17 +209,98 @@ class SharedPodServer:
                 "deal": fleet.deal,
                 "policy": policy}
 
+    # ---- daemon-backed drain control ---- #
+    def _register_drain_job(self, daemon, job_name: str,
+                            plan_policy: str):
+        """Register this drain as an ``external`` job in the daemon's
+        durable store and take its lease — the single-writer
+        ``queued → running`` gate, so the dispatch below is cancellable,
+        pausable and visible exactly like a daemon-drained lane (fleet
+        pods never steal it: ``serve_once`` skips external specs). A
+        previously paused drain re-acquires from ``paused`` and resumes
+        the remaining slices."""
+        pending = {n: j.num_slices for n, j in self.jobs.items()
+                   if j.num_slices > 0}
+        st = daemon.store.state(job_name)
+        if st is None:
+            daemon.submit(job_name, {
+                "external": True, "kind": "serve-drain",
+                "policy": plan_policy, "pending": pending})
+            st = QUEUED
+        epoch = daemon.store.acquire_lease(
+            job_name, daemon.pod_id, daemon.lease_ttl,
+            from_state=PAUSED if st == PAUSED else QUEUED,
+            info=f"serve-drain dispatch ({len(pending)} tenants)")
+        if epoch is None:
+            raise RuntimeError(
+                f"drain job {job_name!r} is not claimable "
+                f"(state {daemon.store.state(job_name)!r})")
+        return job_name, (daemon.pod_id, epoch)
+
+    def _drain_control(self, daemon, job_id: str, fence,
+                       round_idx: int) -> Optional[str]:
+        """One round-boundary control check: honor pending cancel/pause
+        requests, heartbeat the lease, checkpoint remaining slices.
+        Returns the state the drain stopped in (``cancelled``,
+        ``paused``, or ``"lost"`` when the lease was stolen), or None to
+        keep dispatching."""
+        pod_id, epoch = fence
+
+        def ckpt():
+            daemon.store.save_checkpoint(
+                job_id, round_idx,
+                {"pending": {n: j.num_slices
+                             for n, j in self.jobs.items()
+                             if j.num_slices > 0}},
+                fence=fence)
+        try:
+            ctl = daemon.poll_control(job_id)
+            st = daemon.store.state(job_id)
+            if st != RUNNING:
+                return st      # requeued/cancelled behind our back
+            if ctl == "cancel":
+                ckpt()
+                daemon.store.transition(
+                    job_id, CANCELLED,
+                    f"cancelled at round {round_idx}", fence=fence)
+                return CANCELLED
+            if ctl == "pause":
+                ckpt()
+                daemon.store.transition(
+                    job_id, PAUSED, f"paused at round {round_idx}",
+                    fence=fence)
+                return PAUSED
+            daemon.store.renew_lease(job_id, pod_id, epoch,
+                                     daemon.lease_ttl)
+            ckpt()
+        except StaleLease:
+            return "lost"
+        except JobStoreError:
+            return None    # transient store trouble never stops work
+        return None
+
     # ---- scheduling + interleaved dispatch ---- #
     def drain(self, *, max_rounds: int = 10000, plan_first: bool = True,
               arrival_rate: Optional[float] = None,
               slo_deadline: Optional[float] = None,
-              plan_policy: str = "KERNELET"):
+              plan_policy: str = "KERNELET", daemon=None,
+              job_name: str = "serve-drain"):
         """Dispatch every pending job. ``arrival_rate`` switches the
         planning stage to the arrival-timed replay (``plan_arrivals``), so
         the returned plan carries predicted queue-wait/SLO metrics for the
         drain the dispatcher is about to execute; ``plan_policy`` selects
         the planning policy (e.g. ``"EDF-KERNELET"`` for a deadline-aware
-        plan)."""
+        plan).
+
+        ``daemon`` (a ``repro.runtime.daemon.ServingDaemon``) routes the
+        drain through the durable job path: the dispatch runs under a
+        lease-gated ``external`` job named ``job_name``, checkpoints its
+        remaining slices every round, and honors ``daemon.cancel`` /
+        ``daemon.pause`` at round boundaries — a paused drain keeps its
+        undrained slices and a later ``drain(daemon=...)`` with the same
+        ``job_name`` resumes it. The result gains ``job_id`` and
+        ``state`` (``finished`` / ``cancelled`` / ``paused`` /
+        ``"lost"`` if the lease was stolen)."""
         # fail fast with a clear message, not a KeyError mid-dispatch: a
         # pending job must have completed submit() (profile + executable)
         missing = sorted(n for n, j in self.jobs.items() if j.num_slices > 0
@@ -236,9 +319,23 @@ class SharedPodServer:
                                        slo_deadline=slo_deadline,
                                        policy=plan_policy)
                     if arrival_rate is not None else self.plan(engine))
+        jid = fence = None
+        if daemon is not None:
+            jid, fence = self._register_drain_job(daemon, job_name,
+                                                  plan_policy)
         t0 = time.time()
         executed = []
         while any(j.num_slices > 0 for j in self.jobs.values()):
+            if daemon is not None:
+                stopped = self._drain_control(daemon, jid, fence,
+                                              len(executed))
+                if stopped is not None:
+                    return {"rounds": executed,
+                            "wall_s": time.time() - t0,
+                            "predicted_gain":
+                                self._predicted_gain(executed),
+                            "plan": plan, "job_id": jid,
+                            "state": stopped}
             act = [n for n, j in self.jobs.items() if j.num_slices > 0]
             cs = sched.find_coschedule(act)
             if cs.k2 is None:
@@ -268,9 +365,21 @@ class SharedPodServer:
             if len(executed) > max_rounds:
                 raise RuntimeError("scheduler did not drain")
         wall = time.time() - t0
-        return {"rounds": executed, "wall_s": wall,
-                "predicted_gain": self._predicted_gain(executed),
-                "plan": plan}
+        out = {"rounds": executed, "wall_s": wall,
+               "predicted_gain": self._predicted_gain(executed),
+               "plan": plan}
+        if daemon is not None:
+            out["job_id"] = jid
+            try:
+                daemon.store.transition(
+                    jid, FINISHED, "drained",
+                    result={"rounds": len(executed), "wall_s": wall,
+                            "predicted_gain": out["predicted_gain"]},
+                    fence=fence)
+                out["state"] = FINISHED
+            except StaleLease:
+                out["state"] = "lost"
+        return out
 
     def _predicted_gain(self, executed) -> float:
         """Aggregate modeled co-scheduling profit over executed rounds."""

@@ -17,10 +17,21 @@ dispatcher for the repro's replay lanes:
     checkpoint replays the identical IEEE-754 sequence — kill/restart is
     bit-identical to an uninterrupted run (pinned by
     ``tests/test_daemon_recovery.py`` for all six policies).
+  * **Leases, not locks.** Dispatch is lease-gated: ``serve_once`` claims
+    a queued job with ``JobStore.acquire_lease`` (the atomic
+    ``queued → running`` gate), getting back a fencing epoch. Every
+    checkpoint renews the lease (heartbeat) and every store write the
+    drain makes is fenced with ``(pod_id, epoch)`` — if the lease
+    expired and the job was requeued/stolen by a sibling pod, the write
+    raises ``StaleLease`` and the daemon abandons the job (counted
+    ``lost``) instead of double-finishing it. A single daemon is just a
+    fleet of one; the multi-pod controller is
+    ``repro.runtime.fleet_daemon.PodFleet``.
   * **Crash recovery.** On restart, ``recover()`` requeues every job the
     dead process left ``running`` (the ``running → queued`` edge, logged
     as ``recovered``); ``run_until_idle`` then resumes each from its last
-    checkpoint.
+    checkpoint. In a live fleet the same edge is taken per-job by
+    ``JobStore.requeue_expired`` when a dead pod's lease TTL passes.
   * **Retry with backoff.** Transient failures (``JobStoreError``,
     injected ``HostFailure``) re-enter the drain from the last
     checkpoint, sleeping ``min(cap, base * 2^attempt)`` between tries;
@@ -42,16 +53,20 @@ Env knobs (all overridable per-daemon via constructor arguments):
   ``REPRO_DAEMON_MAX_RETRIES``   transient-failure retries (default 3)
   ``REPRO_DAEMON_BACKOFF_BASE``  first retry delay, seconds (default 0.05)
   ``REPRO_DAEMON_BACKOFF_CAP``   max retry delay, seconds (default 2.0)
+  ``REPRO_DAEMON_LEASE_TTL``     lease heartbeat TTL, seconds (default 30)
 
 CLI (used by the fault-injection tests and the CI recovery step)::
 
   python -m repro.runtime.daemon --store pod.sqlite --jobs jobs.json \
-      [--out results.json] [--kill-after-checkpoints K]
+      [--out results.json] [--json] [--pod-id ID] \
+      [--kill-after-checkpoints K]
 
 ``--kill-after-checkpoints K`` SIGKILLs the daemon's own process at the
 K-th checkpoint — deterministic mid-drain crashes for the recovery
 harness. Rerunning the same command without the flag recovers and
-completes the replay.
+completes the replay. The exit code is nonzero when any job ends
+``failed``; ``--json`` prints a one-line machine-readable summary
+(state counts + daemon stats) to stdout for scripting.
 
 This module is numpy-only by design (no jax import chain): it must be
 importable in the tier-1 CI environment.
@@ -59,6 +74,7 @@ importable in the tier-1 CI environment.
 from __future__ import annotations
 
 import argparse
+import itertools
 import json
 import os
 import signal
@@ -70,8 +86,9 @@ import numpy as np
 
 from repro.core.engine import LaneSpec, WorkloadEngine
 from repro.core.jobstore import (CANCELLED, FAILED, FINISHED, PAUSED,
-                                 QUEUED, RUNNING, JobStore, JobStoreError,
-                                 MemoryJobStore)
+                                 QUEUED, RUNNING, IllegalTransition,
+                                 JobStore, JobStoreError, MemoryJobStore,
+                                 StaleLease)
 from repro.core.profiles import C2050, GTX680, TPU_V5E, GPUSpec, \
     KernelProfile
 from repro.core.simulator import IPCTable
@@ -81,8 +98,16 @@ ENV_CKPT_EVERY = "REPRO_DAEMON_CKPT_EVERY"
 ENV_MAX_RETRIES = "REPRO_DAEMON_MAX_RETRIES"
 ENV_BACKOFF_BASE = "REPRO_DAEMON_BACKOFF_BASE"
 ENV_BACKOFF_CAP = "REPRO_DAEMON_BACKOFF_CAP"
+ENV_LEASE_TTL = "REPRO_DAEMON_LEASE_TTL"
+
+# state a drain returns when its lease was stolen mid-flight: not a job
+# state (the thief owns the job's real state), a serve-loop outcome
+LOST = "lost"
 
 _NAMED_GPUS = {g.name: g for g in (C2050, GTX680, TPU_V5E)}
+
+# distinct default pod ids within one process (fleets, tests, respawns)
+_POD_SEQ = itertools.count()
 
 
 def _env_int(name: str, default: int) -> int:
@@ -142,14 +167,26 @@ class ServingDaemon:
     ``on_checkpoint(daemon, job_id, phase)`` fires right after every
     checkpoint write — the fault-injection hook (tests SIGKILL or raise
     ``HostFailure`` from it) and the natural place for controllers to
-    request cancel/pause/preempt of the running job."""
+    request cancel/pause/preempt of the running job.
+    ``on_phase(daemon, job_id, phase)`` fires after every engine step,
+    *before* any checkpoint — the chaos harness kills pods there, so
+    deaths land mid-phase with un-checkpointed work to replay.
+
+    ``pod_id``/``lease_ttl``/``clock`` are the fleet identity: every
+    job this daemon drains is claimed via ``acquire_lease`` and every
+    durable write is fenced with this pod's (id, epoch). ``store``
+    injects an already-open store (the chaos harness wraps one in a
+    fault injector); ``store_path`` is ignored then."""
 
     def __init__(self, store_path: str, *,
                  ckpt_every: Optional[int] = None,
                  max_retries: Optional[int] = None,
                  backoff_base: Optional[float] = None,
                  backoff_cap: Optional[float] = None,
-                 on_checkpoint=None, sleep=time.sleep):
+                 pod_id: Optional[str] = None,
+                 lease_ttl: Optional[float] = None,
+                 clock=time.time, store=None,
+                 on_checkpoint=None, on_phase=None, sleep=time.sleep):
         self.ckpt_every = max(1, ckpt_every if ckpt_every is not None
                               else _env_int(ENV_CKPT_EVERY, 1))
         self.max_retries = max(0, max_retries if max_retries is not None
@@ -158,15 +195,27 @@ class ServingDaemon:
                              else _env_float(ENV_BACKOFF_BASE, 0.05))
         self.backoff_cap = (backoff_cap if backoff_cap is not None
                             else _env_float(ENV_BACKOFF_CAP, 2.0))
+        self.pod_id = (pod_id if pod_id is not None
+                       else f"pod-{os.getpid()}-{next(_POD_SEQ)}")
+        self.lease_ttl = (lease_ttl if lease_ttl is not None
+                          else _env_float(ENV_LEASE_TTL, 30.0))
+        self.clock = clock
         self.on_checkpoint = on_checkpoint
+        self.on_phase = on_phase
         self.sleep = sleep
         self.read_only = False
-        try:
-            self.store = JobStore(store_path)
-        except JobStoreError:
-            # read-only planning mode: serve from memory, survive nothing
-            self.store = MemoryJobStore()
-            self.read_only = True
+        self._counts = {"claimed": 0, "finished": 0, "failed": 0,
+                        "lost": 0}
+        if store is not None:
+            self.store = store
+        else:
+            try:
+                self.store = JobStore(store_path, clock=clock)
+            except JobStoreError:
+                # read-only planning mode: serve from memory, survive
+                # nothing
+                self.store = MemoryJobStore(clock=clock)
+                self.read_only = True
         self.engine = WorkloadEngine()
         self._truths: Dict[tuple, IPCTable] = {}
         self._control: Dict[str, str] = {}      # job_id -> cancel | pause
@@ -174,6 +223,12 @@ class ServingDaemon:
 
     def close(self) -> None:
         self.store.close()
+
+    def stats(self) -> dict:
+        """Serve counters plus the store's ``SQLITE_BUSY`` collision
+        count (``store_contention``) — the multi-writer health signal."""
+        return dict(self._counts, store_contention=int(
+            getattr(self.store, "contention", 0)))
 
     # ---- job intake / control ---- #
     def submit(self, job_id: str, spec: dict) -> None:
@@ -202,11 +257,26 @@ class ServingDaemon:
         cap), the daemon checkpoints and parks the job ``paused``."""
         self._preempt_at[job_id] = float(at)
 
+    def poll_control(self, job_id: str) -> Optional[str]:
+        """Pop the pending cancel/pause request for ``job_id``. External
+        dispatchers (jobs whose spec carries ``"external"``, e.g.
+        ``SharedPodServer.drain``) call this at their own round
+        boundaries to honor the same control requests the daemon applies
+        at phase boundaries for the lanes it drains itself."""
+        return self._control.pop(job_id, None)
+
     def resume(self, job_id: str) -> str:
-        """Resume a paused job from its checkpoint; returns the terminal
-        state it reaches."""
-        self.store.transition(job_id, RUNNING, "resumed")
-        return self._retry_drain(job_id, self.store.spec(job_id))
+        """Resume a paused job from its checkpoint (re-acquiring a fresh
+        lease at the next epoch); returns the terminal state it
+        reaches."""
+        epoch = self.store.acquire_lease(
+            job_id, self.pod_id, self.lease_ttl, from_state=PAUSED,
+            info="resumed")
+        if epoch is None:
+            raise IllegalTransition(
+                f"resume: job {job_id!r} is not paused "
+                f"(state {self.store.state(job_id)!r})")
+        return self._retry_drain(job_id, self.store.spec(job_id), epoch)
 
     # ---- crash recovery ---- #
     def recover(self) -> List[str]:
@@ -218,16 +288,35 @@ class ServingDaemon:
             self.store.transition(jid, QUEUED, "recovered")
         return requeued
 
+    def serve_once(self) -> Optional[tuple]:
+        """Claim and drain ONE queued job via the lease gate; the
+        work-stealing primitive — any idle pod may call this against a
+        shared store and exactly one pod wins each job. Returns
+        ``(job_id, outcome)`` or ``None`` when nothing was claimable.
+        Jobs whose spec carries ``"external"`` (state tracked by an
+        outside dispatcher, e.g. ``SharedPodServer.drain``) are never
+        claimed."""
+        for jid, _ in self.store.jobs(QUEUED):
+            spec = self.store.spec(jid)
+            if spec.get("external"):
+                continue
+            epoch = self.store.acquire_lease(jid, self.pod_id,
+                                             self.lease_ttl)
+            if epoch is None:
+                continue                  # a sibling pod won the race
+            self._counts["claimed"] += 1
+            return jid, self._retry_drain(jid, spec, epoch)
+        return None
+
     def run_until_idle(self) -> Dict[str, str]:
         """Dispatch queued jobs (submission order) until none remain;
-        returns {job_id: terminal state} for everything dispatched."""
+        returns {job_id: outcome} for everything dispatched."""
         out = {}
         while True:
-            queued = self.store.jobs(QUEUED)
-            if not queued:
+            served = self.serve_once()
+            if served is None:
                 return out
-            jid = queued[0][0]
-            out[jid] = self._run_job(jid)
+            out[served[0]] = served[1]
 
     # ---- lane construction ---- #
     def _truth_for(self, gpu: GPUSpec, seed: int, rounds: int,
@@ -275,36 +364,66 @@ class ServingDaemon:
                                 for n, a, c in res.completions],
                 "phases": int(phases), "partial": bool(partial)}
 
-    def _checkpoint(self, job_id: str, phase: int, lane) -> None:
-        self.store.save_checkpoint(job_id, phase, lane.state_json())
+    def _checkpoint(self, job_id: str, phase: int, lane,
+                    fence=None) -> None:
+        if fence is not None:
+            # heartbeat: a healthy drain keeps its lease alive for at
+            # least one more TTL window per checkpoint
+            self.store.renew_lease(job_id, fence[0], fence[1],
+                                   self.lease_ttl)
+        self.store.save_checkpoint(job_id, phase,
+                                   lane.state_json(fence=fence),
+                                   fence=fence)
         if self.on_checkpoint is not None:
             self.on_checkpoint(self, job_id, phase)
 
-    def _run_job(self, job_id: str) -> str:
-        spec = self.store.spec(job_id)
-        self.store.transition(job_id, RUNNING, "dispatch")
-        return self._retry_drain(job_id, spec)
-
-    def _retry_drain(self, job_id: str, spec: dict) -> str:
+    def _retry_drain(self, job_id: str, spec: dict,
+                     epoch: Optional[int] = None) -> str:
         """Drain with capped-exponential-backoff retries on transient
-        failures; exhausting the budget fails the job (never hangs)."""
+        failures; exhausting the budget fails the job (never hangs).
+        ``StaleLease`` is terminal-for-this-pod, never retried: the job
+        was requeued after lease expiry and belongs to whoever claims
+        it next — this pod walks away (outcome ``"lost"``)."""
+        fence = None if epoch is None else (self.pod_id, epoch)
         attempt = 0
         while True:
             try:
-                return self._drain(job_id, spec)
+                st = self._drain(job_id, spec, fence)
+                if st == FINISHED:
+                    self._counts["finished"] += 1
+                return st
+            except StaleLease:
+                self._counts["lost"] += 1
+                return LOST
+            except (ValueError, KeyError, TypeError) as e:
+                # bad spec / config error: permanent, not transient —
+                # fail the job instead of crashing the serve loop
+                try:
+                    self.store.transition(job_id, FAILED,
+                                          f"bad spec: {e}", fence=fence)
+                except (JobStoreError, KeyError, StaleLease,
+                        IllegalTransition):
+                    pass
+                self._counts["failed"] += 1
+                return FAILED
             except (JobStoreError, HostFailure) as e:
                 attempt += 1
                 if attempt > self.max_retries:
                     try:
                         self.store.transition(
-                            job_id, FAILED, f"retries exhausted: {e}")
+                            job_id, FAILED, f"retries exhausted: {e}",
+                            fence=fence)
                     except (JobStoreError, KeyError):
                         pass             # store gone too: job is lost anyway
+                    except StaleLease:
+                        self._counts["lost"] += 1
+                        return LOST
+                    self._counts["failed"] += 1
                     return FAILED
                 self.sleep(min(self.backoff_cap,
                                self.backoff_base * (2.0 ** (attempt - 1))))
 
-    def _drain(self, job_id: str, spec: dict) -> str:
+    def _drain(self, job_id: str, spec: dict, fence=None) -> str:
         lane = self.engine.start([self.lane_spec(spec)])[0]
         ck = self.store.load_checkpoint(job_id)
         phase = 0
@@ -315,30 +434,37 @@ class ServingDaemon:
         while active:
             ctl = self._control.pop(job_id, None)
             if ctl in ("cancel", "pause"):
-                self._checkpoint(job_id, phase, lane)
+                self._checkpoint(job_id, phase, lane, fence)
                 if ctl == "cancel":
                     self.store.transition(
                         job_id, CANCELLED, "cancelled at phase boundary",
-                        result=self._result_dict(lane, phase, partial=True))
+                        result=self._result_dict(lane, phase,
+                                                 partial=True),
+                        fence=fence)
                     return CANCELLED
                 self.store.transition(job_id, PAUSED,
-                                      "paused at phase boundary")
+                                      "paused at phase boundary",
+                                      fence=fence)
                 return PAUSED
             cap = self._preempt_at.get(job_id)
             if cap is not None and lane.total >= cap:
                 # the truncated phase has been charged: park the job
                 self._preempt_at.pop(job_id, None)
-                self._checkpoint(job_id, phase, lane)
+                self._checkpoint(job_id, phase, lane, fence)
                 self.store.transition(
-                    job_id, PAUSED, f"preempted at {float(lane.total)!r}")
+                    job_id, PAUSED, f"preempted at {float(lane.total)!r}",
+                    fence=fence)
                 return PAUSED
             lane.cap_at = cap if cap is not None else np.inf
             active = self.engine.step(active)
             phase += 1
+            if self.on_phase is not None:
+                self.on_phase(self, job_id, phase)
             if phase % self.ckpt_every == 0 or not active:
-                self._checkpoint(job_id, phase, lane)
+                self._checkpoint(job_id, phase, lane, fence)
         self.store.transition(job_id, FINISHED, "drained",
-                              result=self._result_dict(lane, phase))
+                              result=self._result_dict(lane, phase),
+                              fence=fence)
         self.store.drop_checkpoint(job_id)
         return FINISHED
 
@@ -358,6 +484,14 @@ def main(argv=None) -> int:
                          "already-known job ids are skipped)")
     ap.add_argument("--out", default=None,
                     help="write results JSON here (default: stdout)")
+    ap.add_argument("--json", action="store_true",
+                    help="print a one-line JSON status summary (state "
+                         "counts + daemon stats) to stdout")
+    ap.add_argument("--pod-id", default=None,
+                    help="fleet identity for leases (default: "
+                         "pod-<pid>-<seq>)")
+    ap.add_argument("--lease-ttl", type=float, default=None,
+                    help="lease heartbeat TTL in seconds")
     ap.add_argument("--checkpoint-every", type=int, default=None)
     ap.add_argument("--kill-after-checkpoints", type=int, default=None,
                     help="SIGKILL this process at the K-th checkpoint "
@@ -376,6 +510,8 @@ def main(argv=None) -> int:
 
     daemon = ServingDaemon(args.store,
                            ckpt_every=args.checkpoint_every,
+                           pod_id=args.pod_id,
+                           lease_ttl=args.lease_ttl,
                            on_checkpoint=hook)
     with open(args.jobs) as f:
         jobs = json.load(f)
@@ -385,19 +521,30 @@ def main(argv=None) -> int:
     daemon.recover()
     daemon.run_until_idle()
 
+    states = daemon.store.jobs()
     out = {jid: {"state": st,
                  "result": daemon.store.result(jid),
                  "events": [[e[2], e[3], e[4]]
                             for e in daemon.store.events(jid)]}
-           for jid, st in daemon.store.jobs()}
+           for jid, st in states}
     payload = json.dumps(out, default=float)
     if args.out:
         with open(args.out, "w") as f:
             f.write(payload)
     else:
         print(payload)
+    n_failed = sum(1 for _, st in states if st == FAILED)
+    if args.json:
+        by_state: Dict[str, int] = {}
+        for _, st in states:
+            by_state[st] = by_state.get(st, 0) + 1
+        print(json.dumps({"pod": daemon.pod_id, "jobs": len(states),
+                          "states": by_state, "stats": daemon.stats()},
+                         sort_keys=True))
     daemon.close()
-    return 0
+    # a job that exhausted its retries is an operational failure: make
+    # the exit code say so instead of reporting success regardless
+    return 1 if n_failed else 0
 
 
 if __name__ == "__main__":

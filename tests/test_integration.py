@@ -143,6 +143,52 @@ def test_serving_queue_drains():
     assert res["predicted_gain"] > 0.05      # complementary pair found
 
 
+def test_serve_drain_through_daemon(tmp_path):
+    """The planner-issued drain rides the durable job path: lease-gated
+    external job, round-boundary checkpoints, pause at a round boundary
+    with slices preserved, resume under a fresh fencing epoch, finish
+    with a durable result — and fleet pods never steal it."""
+    from repro.core.jobstore import CANCELLED, FINISHED, PAUSED
+    from repro.launch.serve import Job, SharedPodServer
+    from repro.runtime.daemon import ServingDaemon
+    srv = SharedPodServer()
+    srv.submit(Job("a-prefill", "phi3-mini-3.8b", "prefill", 12, 1, 32))
+    srv.submit(Job("b-decode", "starcoder2-15b", "decode", 12, 1, 32))
+    dmn = ServingDaemon(str(tmp_path / "serve.sqlite"))
+    calls = []
+    orig = srv._exec["a-prefill"]
+
+    def pause_after_first_slice():
+        calls.append(1)
+        if len(calls) == 1:
+            dmn.pause("serve-drain")
+        return orig()
+
+    srv._exec["a-prefill"] = pause_after_first_slice
+    res = srv.drain(daemon=dmn, plan_first=False)
+    assert res["state"] == PAUSED
+    assert res["job_id"] == "serve-drain"
+    assert dmn.store.state("serve-drain") == PAUSED
+    remaining = {n: j.num_slices for n, j in srv.jobs.items()}
+    assert any(v > 0 for v in remaining.values())
+    _, ck = dmn.store.load_checkpoint("serve-drain")
+    assert ck["pending"] == {n: v for n, v in remaining.items() if v}
+    assert dmn.serve_once() is None     # external: pods never claim it
+    res2 = srv.drain(daemon=dmn, plan_first=False)   # resume remainder
+    assert res2["state"] == FINISHED
+    assert all(j.num_slices == 0 for j in srv.jobs.values())
+    stored = dmn.store.result("serve-drain")
+    assert stored["rounds"] == len(res2["rounds"])
+    pod, epoch, _ = dmn.store.lease_of("serve-drain")
+    assert (pod, epoch) == ("", 2)      # resumed under a fresh epoch
+    # queued external jobs stay cancellable before dispatch starts
+    dmn.submit("serve-drain-2", {"external": True})
+    assert dmn.serve_once() is None
+    dmn.cancel("serve-drain-2")
+    assert dmn.store.state("serve-drain-2") == CANCELLED
+    dmn.close()
+
+
 def test_structural_collective_accounting():
     """Loop-aware accounting: trip counts from while-condition constants;
     hoisted (entry-level) ops counted once."""

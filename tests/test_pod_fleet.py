@@ -1,0 +1,430 @@
+"""Multi-pod fleet tests: leases, fencing, work-stealing, chaos.
+
+The load-bearing proof of this PR: a >= 3-pod fleet under a seeded
+kill/fault/clock-skew schedule finishes every submitted job exactly
+once, with pooled results bit-identical to an uninterrupted single-pod
+run — for all six policies. Plus the unit surface underneath it: the
+lease single-writer gate, fencing-epoch rejection of zombie writes,
+``SQLITE_BUSY`` retry + contention accounting, ``data_version`` change
+signaling, Moore–Hodgson overload shedding, dead-pod failover with
+respawn, and the fleet CLI's SIGKILL-then-recover drill.
+
+numpy-only — runs in the tier-1 CI tier. The conservation property at
+the bottom additionally needs hypothesis (skipped when absent; the CI
+``pod-fleet-chaos`` job installs it).
+"""
+import json
+import os
+import sqlite3
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core.jobstore import (CANCELLED, FINISHED, QUEUED, RUNNING,
+                                 JobStore, JobStoreError,
+                                 MemoryJobStore, StaleLease)
+from repro.runtime.chaos import (_PROFILES, PodChaos, finished_exactly_once,
+                                 run_scenario)
+from repro.runtime.daemon import LOST, ServingDaemon
+from repro.runtime.fleet_daemon import PodFleet, moore_hodgson_shed
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+
+def _fleet_jobs(n=6, *, rounds=300, policy="KERNELET"):
+    order = ["A", "B", "C", "D", "A", "B"]
+    return {f"j{i}": {"policy": policy, "profiles": _PROFILES,
+                      "order": order, "gpu": "C2050", "rounds": rounds,
+                      "table_seed": 0, "persist": False,
+                      "alpha_p": 0.4, "alpha_m": 0.1}
+            for i in range(n)}
+
+
+@pytest.fixture(params=["sqlite", "memory"])
+def store(request, tmp_path):
+    s = (JobStore(str(tmp_path / "s.sqlite"))
+         if request.param == "sqlite" else MemoryJobStore())
+    yield s
+    s.close()
+
+
+# ---------------------------------------------------------------- #
+# leases: the single-writer gate
+# ---------------------------------------------------------------- #
+
+def test_lease_single_writer_gate(store):
+    store.create_job("j", {"x": 1})
+    assert store.acquire_lease("j", "p1", 5.0, now=100.0) == 1
+    assert store.state("j") == RUNNING
+    # the gate: a second pod racing for the same job loses cleanly
+    assert store.acquire_lease("j", "p2", 5.0, now=100.0) is None
+    pod, epoch, expires = store.lease_of("j")
+    assert (pod, epoch, expires) == ("p1", 1, 105.0)
+
+
+def test_requeue_expired_and_epoch_bump(store):
+    store.create_job("j", {})
+    store.create_job("k", {})
+    store.acquire_lease("j", "p1", 5.0, now=100.0)
+    store.acquire_lease("k", "p1", 50.0, now=100.0)
+    assert store.requeue_expired(now=104.0) == []
+    assert store.requeue_expired(now=106.0) == [("j", "p1", 1)]
+    assert store.state("j") == QUEUED
+    assert store.state("k") == RUNNING
+    assert "lease expired" in store.events("j")[-1][4]
+    # requeue blanks the holder: it never re-expires
+    assert store.requeue_expired(now=140.0) == []
+    # epochs are monotone per job, never reset by requeue
+    assert store.acquire_lease("j", "p2", 5.0, now=106.0) == 2
+
+
+def test_fencing_rejects_zombie_writes(store):
+    """The zombie-pod guard: after expiry + steal, every fenced write
+    from the old holder raises StaleLease — checkpoints, heartbeats,
+    and terminal transitions alike."""
+    store.create_job("j", {})
+    e1 = store.acquire_lease("j", "p1", 0.1, now=100.0)
+    store.requeue_expired(now=101.0)
+    e2 = store.acquire_lease("j", "p2", 5.0, now=101.0)
+    assert (e1, e2) == (1, 2)
+    with pytest.raises(StaleLease):
+        store.save_checkpoint("j", 1, {"z": 1}, fence=("p1", e1))
+    with pytest.raises(StaleLease):
+        store.renew_lease("j", "p1", e1, 5.0, now=101.0)
+    with pytest.raises(StaleLease):
+        store.transition("j", FINISHED, "zombie", result={},
+                         fence=("p1", e1))
+    assert store.state("j") == RUNNING      # nothing leaked through
+    # the live holder's writes land
+    store.save_checkpoint("j", 1, {"z": 2}, fence=("p2", e2))
+    assert store.load_checkpoint("j") == (1, {"z": 2})
+    store.transition("j", FINISHED, "drained", result={"ok": 1},
+                     fence=("p2", e2))
+    assert store.state("j") == FINISHED
+    pod, epoch, _ = store.lease_of("j")
+    assert (pod, epoch) == ("", 2)    # holder blanked, epoch preserved
+    # even the winner cannot write after its own terminal transition
+    with pytest.raises(StaleLease):
+        store.save_checkpoint("j", 2, {}, fence=("p2", e2))
+
+
+def test_stale_lease_is_not_retryable(store):
+    # fencing violations must never enter the transient-retry net
+    assert not issubclass(StaleLease, JobStoreError)
+
+
+# ---------------------------------------------------------------- #
+# SQLite multi-writer hardening
+# ---------------------------------------------------------------- #
+
+def test_v1_store_migrates_in_place(tmp_path):
+    path = str(tmp_path / "v1.sqlite")
+    s = JobStore(path)
+    s.create_job("j", {"a": 1})
+    s.close()
+    conn = sqlite3.connect(path)
+    conn.execute("DROP TABLE leases")
+    conn.execute("PRAGMA user_version = 1")
+    conn.commit()
+    conn.close()
+    s2 = JobStore(path)                # v1 (PR 6) migrates in place
+    assert s2.state("j") == QUEUED
+    assert s2.acquire_lease("j", "p", 5.0) == 1
+    s2.close()
+
+
+def test_foreign_schema_version_refused(tmp_path):
+    path = str(tmp_path / "v9.sqlite")
+    JobStore(path).close()
+    conn = sqlite3.connect(path)
+    conn.execute("PRAGMA user_version = 9")
+    conn.commit()
+    conn.close()
+    with pytest.raises(JobStoreError):
+        JobStore(path)
+
+
+def test_sqlite_busy_retry_and_contention_counter(tmp_path):
+    path = str(tmp_path / "c.sqlite")
+    s = JobStore(path, timeout_s=0.01, busy_retries=2)
+    blocker = sqlite3.connect(path)
+    blocker.execute("BEGIN IMMEDIATE")
+    with pytest.raises(JobStoreError):
+        s.create_job("j", {})
+    assert s.contention >= 1
+    blocker.rollback()
+    blocker.close()
+    s.create_job("j", {})       # recovers once the writer lock clears
+    assert s.state("j") == QUEUED
+    s.close()
+
+
+def test_sqlite_data_version_signals_sibling_commits(tmp_path):
+    path = str(tmp_path / "dv.sqlite")
+    a, b = JobStore(path), JobStore(path)
+    v = a.data_version()
+    assert a.data_version() == v       # idle: no spurious wakeups
+    b.create_job("j", {})
+    assert a.data_version() != v       # a sibling commit is visible
+    a.close()
+    b.close()
+
+
+def test_memory_store_data_version_tracks_writes():
+    s = MemoryJobStore()
+    v0 = s.data_version()
+    s.create_job("j", {})
+    assert s.data_version() > v0
+    s.close()
+
+
+def test_daemon_stats_surface(tmp_path):
+    d = ServingDaemon(str(tmp_path / "d.sqlite"))
+    assert d.stats() == {"claimed": 0, "finished": 0, "failed": 0,
+                         "lost": 0, "store_contention": 0}
+    d.close()
+
+
+# ---------------------------------------------------------------- #
+# Moore–Hodgson overload shedding
+# ---------------------------------------------------------------- #
+
+def test_moore_hodgson_feasible_set_untouched():
+    assert moore_hodgson_shed([("a", 1.0, 10.0), ("b", 1.0, 10.0)],
+                              now=0.0) == []
+
+
+def test_moore_hodgson_drops_largest_service():
+    jobs = [("small", 1.0, 3.0), ("big", 5.0, 4.0), ("mid", 2.0, 6.0)]
+    # EDD: small C=1 ok; big C=6 > 4 -> evict big (largest service);
+    # mid then fits at C=3 <= 6
+    assert moore_hodgson_shed(jobs, now=0.0) == ["big"]
+
+
+def test_moore_hodgson_capacity_and_now_shift():
+    jobs = [("a", 4.0, 3.0), ("b", 4.0, 3.0)]
+    assert set(moore_hodgson_shed(jobs, now=0.0)) == {"a", "b"}
+    assert moore_hodgson_shed(jobs, now=0.0, capacity=4.0) == []
+    # a later "now" makes the same deadlines hopeless again
+    assert set(moore_hodgson_shed(jobs, now=10.0, capacity=4.0)) \
+        == {"a", "b"}
+
+
+# ---------------------------------------------------------------- #
+# fleet: stealing, shedding, failover, fault bursts
+# ---------------------------------------------------------------- #
+
+def test_fleet_drains_and_steals(tmp_path):
+    path = str(tmp_path / "f.sqlite")
+    fleet = PodFleet(path, n_pods=3, lease_ttl=5.0, poll_s=0.005)
+    jobs = _fleet_jobs(6)
+    for jid, spec in jobs.items():
+        fleet.submit(jid, spec)
+    summary = fleet.run(timeout_s=120.0)
+    fleet.close()
+    assert summary["idle"], summary["jobs"]
+    assert all(st == FINISHED for st in summary["jobs"].values())
+    served = sorted(j for js in summary["served_by"].values()
+                    for j in js)
+    assert served == sorted(jobs)       # each job served exactly once
+    s = JobStore(path)
+    finished_exactly_once(s, jobs)
+    s.close()
+
+
+def test_fleet_sheds_hopeless_deadline_jobs(tmp_path):
+    path = str(tmp_path / "shed.sqlite")
+    fleet = PodFleet(path, n_pods=1, lease_ttl=5.0, poll_s=0.005)
+    jobs = _fleet_jobs(2)
+    for jid, spec in jobs.items():
+        fleet.submit(jid, spec)
+    base = _fleet_jobs(1)["j0"]
+    fleet.submit("doomed", dict(base, deadline_at=time.time() - 10.0,
+                                est_service_s=5.0))
+    fleet.submit("feasible", dict(base,
+                                  deadline_at=time.time() + 3600.0,
+                                  est_service_s=0.1))
+    summary = fleet.run(timeout_s=120.0)
+    fleet.close()
+    assert summary["jobs"]["doomed"] == CANCELLED
+    assert summary["jobs"]["feasible"] == FINISHED
+    assert summary["stats"]["shed"] == 1
+    s = JobStore(path)
+    assert s.events("doomed")[-1][4].startswith("shed:")
+    s.close()
+
+
+def test_fleet_dead_pod_failover_and_respawn(tmp_path):
+    path = str(tmp_path / "kill.sqlite")
+    chaos = [PodChaos(kill_after_phases=2), PodChaos(), PodChaos()]
+    fleet = PodFleet(path, n_pods=3, lease_ttl=0.3, ckpt_every=1,
+                     poll_s=0.005, chaos=chaos)
+    jobs = _fleet_jobs(6)
+    for jid, spec in jobs.items():
+        fleet.submit(jid, spec)
+    summary = fleet.run(timeout_s=120.0)
+    fleet.close()
+    assert summary["journal_counts"].get("killed", 0) >= 1
+    assert summary["journal_counts"].get("requeue", 0) >= 1
+    assert summary["stats"]["respawns"] >= 1
+    assert all(st == FINISHED for st in summary["jobs"].values())
+    s = JobStore(path)
+    finished_exactly_once(s, jobs)
+    s.close()
+
+
+def test_fleet_survives_store_fault_bursts(tmp_path):
+    path = str(tmp_path / "fault.sqlite")
+    chaos = [PodChaos(fault_at_op=5, fault_burst=3),
+             PodChaos(fault_at_op=9, fault_burst=2)]
+    fleet = PodFleet(path, n_pods=2, lease_ttl=5.0, poll_s=0.005,
+                     chaos=chaos)
+    jobs = _fleet_jobs(4)
+    for jid, spec in jobs.items():
+        fleet.submit(jid, spec)
+    summary = fleet.run(timeout_s=120.0)
+    faults = sum(getattr(p.daemon.store, "faults", 0)
+                 for p in fleet.pods if p.daemon is not None)
+    fleet.close()
+    assert faults >= 1                  # the bursts actually fired
+    assert all(st == FINISHED for st in summary["jobs"].values())
+    s = JobStore(path)
+    finished_exactly_once(s, jobs)
+    s.close()
+
+
+def test_lost_job_counted_not_double_finished(tmp_path):
+    """Zombie-pod end to end at the daemon layer: the victim's lease is
+    requeued under a skewed clock mid-drain, a thief finishes the job,
+    and the victim's next fenced write turns into a counted ``lost`` —
+    never a second finish."""
+    path = str(tmp_path / "zombie.sqlite")
+    victim = ServingDaemon(path, pod_id="victim", ckpt_every=1)
+    thief = ServingDaemon(path, pod_id="thief", ckpt_every=1)
+    victim.submit("j0", _fleet_jobs(1)["j0"])
+
+    stolen = []
+
+    def steal_once(daemon, job_id, phase):
+        if stolen:
+            return
+        stolen.append(job_id)
+        # a skewed sibling sees the lease as expired and requeues it
+        assert daemon.store.requeue_expired(now=time.time() + 1e6)
+        assert thief.serve_once() == ("j0", FINISHED)
+
+    victim.on_checkpoint = steal_once
+    assert victim.serve_once() == ("j0", LOST)
+    assert victim.stats()["lost"] == 1
+    assert thief.stats()["finished"] == 1
+    finished_exactly_once(victim.store, ["j0"])
+    victim.close()
+    thief.close()
+
+
+def test_checkpoint_embeds_fence_provenance(tmp_path):
+    seen = []
+    d = ServingDaemon(str(tmp_path / "prov.sqlite"), pod_id="prov-pod",
+                      ckpt_every=1)
+    d.on_checkpoint = (lambda dm, jid, ph:
+                       seen.append(dm.store.load_checkpoint(jid)))
+    d.submit("j0", _fleet_jobs(1)["j0"])
+    d.run_until_idle()
+    d.close()
+    assert seen
+    _, payload = seen[0]
+    assert payload["fence"] == ["prov-pod", 1]
+
+
+# ---------------------------------------------------------------- #
+# the chaos pin: seeded schedules, exactly-once, bit-identical
+# ---------------------------------------------------------------- #
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_seeded_schedule_bit_identical(tmp_path, seed):
+    """>= 3 pods under a seeded kill/fault/clock-skew schedule: every
+    job finished exactly once, pooled results bit-identical to the
+    uninterrupted single-pod run, all six policies (asserted inside
+    run_scenario)."""
+    summary = run_scenario(seed, n_pods=3, workdir=str(tmp_path),
+                           verbose=False)
+    assert summary["idle"]
+
+
+# ---------------------------------------------------------------- #
+# CLI drills
+# ---------------------------------------------------------------- #
+
+def _run_cli(module, workdir, store, out, *extra):
+    env = {**os.environ, "PYTHONPATH": SRC, "REPRO_IPC_CACHE": "0"}
+    cmd = [sys.executable, "-m", module, "--store", str(store),
+           "--jobs", str(workdir / "jobs.json"), "--out", str(out),
+           *extra]
+    return subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=600)
+
+
+def test_daemon_cli_json_summary_and_failure_exit(tmp_path):
+    jobs = _fleet_jobs(1)
+    jobs["bad"] = dict(jobs["j0"], gpu="NO-SUCH-GPU")
+    (tmp_path / "jobs.json").write_text(json.dumps(jobs))
+    r = _run_cli("repro.runtime.daemon", tmp_path,
+                 tmp_path / "d.sqlite", tmp_path / "out.json",
+                 "--json", "--pod-id", "cli-pod")
+    assert r.returncode == 1, (r.returncode, r.stderr)   # failed job
+    summary = json.loads(r.stdout.strip().splitlines()[-1])
+    assert summary["pod"] == "cli-pod"
+    assert summary["states"] == {"failed": 1, "finished": 1}
+    assert summary["stats"]["claimed"] == 2
+    assert "store_contention" in summary["stats"]
+
+
+def test_fleet_cli_sigkill_then_recover(tmp_path):
+    jobs = _fleet_jobs(4)
+    (tmp_path / "jobs.json").write_text(json.dumps(jobs))
+    store, out = tmp_path / "fleet.sqlite", tmp_path / "out.json"
+    r = _run_cli("repro.runtime.fleet_daemon", tmp_path, store, out,
+                 "--pods", "2", "--lease-ttl", "0.3",
+                 "--kill-after-phases", "3")
+    assert r.returncode == -9, (r.returncode, r.stderr)
+    r = _run_cli("repro.runtime.fleet_daemon", tmp_path, store, out,
+                 "--pods", "2", "--lease-ttl", "0.3", "--json")
+    assert r.returncode == 0, r.stderr
+    got = json.loads(out.read_text())
+    assert all(v["state"] == "finished" for v in got.values())
+    line = json.loads(r.stdout.strip().splitlines()[-1])
+    assert line["idle"] is True
+    s = JobStore(str(store))
+    finished_exactly_once(s, jobs)      # across BOTH processes
+    s.close()
+
+
+# ---------------------------------------------------------------- #
+# conservation property (hypothesis; skipped when not installed)
+# ---------------------------------------------------------------- #
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=4, deadline=None, database=None)
+    @given(seed=st.integers(min_value=0, max_value=10**6))
+    def test_conservation_of_completions(seed):
+        """Lease expiry + requeue + work-stealing never loses or
+        double-counts a completed instance: for any seeded fault
+        schedule, run_scenario asserts exactly-once finishes and
+        bit-identical completions against the uninterrupted
+        reference."""
+        summary = run_scenario(seed, n_pods=3, rounds=300,
+                               lease_ttl=0.3, verbose=False)
+        assert summary["idle"]
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_conservation_of_completions():
+        pass
