@@ -25,6 +25,7 @@ bench-smoke:
 	$(PYTHON) -m benchmarks.daemon_recovery --smoke
 	$(PYTHON) -m benchmarks.fleet_hetero --smoke
 	$(PYTHON) -m benchmarks.pod_fleet --smoke
+	$(PYTHON) -m benchmarks.online_adaptation --smoke
 	$(MAKE) bench-gate
 
 # perf-regression gate: self-test (an injected 2x slowdown must fail),

@@ -28,6 +28,11 @@ baseline would (the history's own consecutive same-box entries swing by
     fleet drain throughput at the tracked 12-job/3-pod configuration:
     the lease acquisition gate, the ``data_version`` monitor loop, and
     the SQLITE_BUSY retry path all sit under this number.
+  * ``online_adaptation`` / ``adaptation_gain_p95`` (higher is better) —
+    frozen-prior vs adaptive p95 wait on the tracked drifting stream.
+    Unlike the wall-clock lanes this is a ratio of simulated cycles, so
+    it is exactly reproducible: any movement at all is a behavior
+    change in the probe/observe/re-decision path, not noise.
 
 A lane fails when it is more than ``tolerance`` (default 25%,
 ``REPRO_BENCH_GATE_TOL``) worse than the baseline. Wall-clock probes are
@@ -58,7 +63,7 @@ import statistics
 import sys
 
 from benchmarks import (daemon_recovery, decision_latency, fleet_hetero,
-                        pod_fleet, replay_throughput)
+                        online_adaptation, pod_fleet, replay_throughput)
 
 REPORT_PATH = os.path.join("artifacts", "bench", "perf_gate.json")
 
@@ -118,6 +123,12 @@ def _probe_pod_fleet() -> float:
     return float(pod_fleet.bench_steal_throughput()["steal_jobs_per_s"])
 
 
+def _probe_adaptation() -> float:
+    # the tracked history configuration, so the comparison is like-for-like
+    return float(online_adaptation.bench(
+        instances=6, rounds=2500)["adaptation_gain_p95"])
+
+
 # (lane name, history path, metric, better, probe)
 LANES = (
     ("decision_latency", decision_latency.HISTORY_PATH,
@@ -130,6 +141,8 @@ LANES = (
      "lanes_per_s", "higher", _probe_fleet_hetero),
     ("pod_fleet", pod_fleet.HISTORY_PATH,
      "steal_jobs_per_s", "higher", _probe_pod_fleet),
+    ("online_adaptation", online_adaptation.HISTORY_PATH,
+     "adaptation_gain_p95", "higher", _probe_adaptation),
 )
 
 

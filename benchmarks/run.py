@@ -28,7 +28,8 @@ def main() -> None:
 
     from benchmarks.paper_figs import ALL_FIGS
     from benchmarks import (arrival_latency, daemon_recovery,
-                            decision_latency, fleet_hetero, pod_fleet,
+                            decision_latency, fleet_hetero,
+                            online_adaptation, pod_fleet,
                             replay_throughput, tpu_coschedule)
 
     benches = dict(ALL_FIGS)
@@ -39,6 +40,7 @@ def main() -> None:
     benches["daemon_recovery"] = daemon_recovery.bench
     benches["fleet_hetero"] = fleet_hetero.bench
     benches["pod_fleet"] = pod_fleet.bench
+    benches["online_adaptation"] = online_adaptation.bench
     if args.only:
         benches = {k: v for k, v in benches.items() if k == args.only}
 
@@ -61,6 +63,8 @@ def main() -> None:
             rec = fn(lanes=64, instances=32, rounds=400)
         elif args.fast and name == "pod_fleet":
             rec = fn(n_jobs=6, rounds=200)
+        elif args.fast and name == "online_adaptation":
+            rec = fn(instances=4, rounds=500)
         else:
             rec = fn()
         dt = time.time() - t0
@@ -80,6 +84,8 @@ def main() -> None:
                 fleet_hetero.record_history(rec)
             elif name == "pod_fleet":
                 pod_fleet.record_history(rec)
+            elif name == "online_adaptation":
+                online_adaptation.record_history(rec)
         print(f"{name},{dt * 1e6:.0f},{_headline_str(rec)}")
 
 

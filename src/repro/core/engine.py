@@ -64,6 +64,7 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.markov import MarkovModel
+from repro.core.online import ProfileEstimator
 from repro.core.profiles import GPUSpec, KernelProfile, content_digest
 from repro.core.queue import WorkloadResult, _Pending, _solo_phase
 from repro.core.scheduler import KerneletScheduler
@@ -73,6 +74,10 @@ from repro.core.simulator import IPCTable
 # last two are the arrival-aware family (deadline slack / predicted wait)
 SCHEDULED_POLICIES = ("KERNELET", "OPT", "EDF-KERNELET", "PWAIT-CP")
 RANKED_POLICIES = ("EDF-KERNELET", "PWAIT-CP")
+# policies that can learn profiles online (LaneSpec.adapt): the model-mode
+# scheduled family. OPT decides on measured IPCs (nothing to learn), and
+# BASE/MC never consult a predicted profile at all.
+ADAPT_POLICIES = ("KERNELET", "EDF-KERNELET", "PWAIT-CP")
 
 
 @dataclasses.dataclass
@@ -108,6 +113,21 @@ class LaneSpec:
     slo_deadline: Optional[float] = None
     deadlines: Optional[Sequence[float]] = None
     interpolate: bool = True
+    # ---- online profile learning (PR 9) ---- #
+    # ``priors`` overlay the decision side only: kernels named here are
+    # *unknown* — the scheduler predicts from the prior profile while the
+    # measurement table keeps charging the true physics in ``profiles``.
+    # ``adapt=True`` (model-mode scheduled policies only) attaches a
+    # ``ProfileEstimator`` that learns a per-kernel throughput scale from
+    # each charged phase and probes (truncates) phases until estimates
+    # settle; ``adapt=False`` with priors replays the frozen prior —
+    # bit-identical to the pre-PR-9 engine on the prior profiles.
+    adapt: bool = False
+    priors: Optional[Dict[str, KernelProfile]] = None
+    adapt_alpha: float = 0.5
+    reslice_threshold: float = 0.05
+    adapt_min_conf: int = 2
+    probe_frac: float = 0.25
 
 
 @dataclasses.dataclass
@@ -130,10 +150,15 @@ class FleetResult:
 def aggregate_latency(results: Sequence[WorkloadResult],
                       slo_deadline: Optional[float] = None) -> dict:
     """Pool every lane's per-instance completion records into one latency
-    summary (same fields as ``WorkloadResult.latency_metrics``)."""
+    summary (same fields as ``WorkloadResult.latency_metrics``). Lane
+    expected-instance counts pool additively (lanes without one — backlog
+    lanes — contribute completions only), so partially-drained fleets
+    report honest SLO attainment."""
+    known = [r.n_expected for r in results if r.n_expected is not None]
     pooled = WorkloadResult("", 0.0, 0, 0.0, [],
                             completions=[c for r in results
-                                         for c in r.completions])
+                                         for c in r.completions],
+                            n_expected=sum(known) if known else None)
     return pooled.latency_metrics(slo_deadline)
 
 
@@ -149,6 +174,28 @@ class _Lane:
                              rel_deadline=spec.slo_deadline,
                              interpolate=spec.interpolate)
         self.sched = sched
+        # decision-side profiles: priors overlay the truth for unknown
+        # kernels (the scheduler predicts from these; charging and the
+        # pending ledger always use the true ``spec.profiles``)
+        self.dprofiles = ({**spec.profiles, **spec.priors}
+                          if spec.priors else spec.profiles)
+        if spec.adapt:
+            if spec.policy not in ADAPT_POLICIES:
+                raise ValueError(
+                    f"adapt=True requires a model-mode scheduled policy "
+                    f"{ADAPT_POLICIES}, not {spec.policy!r}")
+            tracked = (spec.priors if spec.priors else spec.profiles)
+            self.est = ProfileEstimator(
+                tracked, alpha=spec.adapt_alpha,
+                reslice_threshold=spec.reslice_threshold,
+                min_confidence=spec.adapt_min_conf,
+                probe_frac=spec.probe_frac)
+        else:
+            self.est = None
+        # phases after which an estimate moved past the re-slice
+        # threshold, i.e. the next decision re-fires against a materially
+        # refreshed profile
+        self.est_redecisions = 0
         self.total = 0.0
         self.n_cos = 0
         self.n_slices = 0.0
@@ -169,10 +216,38 @@ class _Lane:
     def live(self) -> bool:
         return bool(self.pend.active()) or self.pend.has_pending()
 
+    def adapt_stats(self) -> Optional[dict]:
+        """Estimate-quality summary for adaptive lanes (``None``
+        otherwise): learned scales, confidence, update/re-decision
+        counts, and the per-observation scale / prediction-error traces
+        the adaptation bench asserts convergence on."""
+        if self.est is None:
+            return None
+        est = self.est
+        names = sorted(est.trace)
+        return {
+            "scales": {n: float(est.scale(n)) for n in names},
+            "confidence": {n: int(est.confidence(n)) for n in names},
+            "settled": {n: bool(est.settled(n)) for n in names},
+            "n_updates": int(est.n_updates),
+            "n_redecisions": int(self.est_redecisions),
+            "trace": {n: [float(v) for v in est.trace[n]]
+                      for n in names},
+            "err_trace": {n: [float(v) for v in est.err_trace[n]]
+                          for n in names},
+        }
+
     def result(self) -> WorkloadResult:
+        # arrival-timed lanes know their submitted-instance count: carry
+        # it so partial drains (daemon preempt/cancel) report honest SLO
+        # attainment — never-finished instances count as misses
+        n_exp = (len(self.spec.order) if self.spec.arrivals is not None
+                 else None)
         return WorkloadResult(self.spec.policy, self.total, self.n_cos,
                               self.n_slices, self.log,
-                              completions=self.pend.completions)
+                              completions=self.pend.completions,
+                              n_expected=n_exp,
+                              adapt_stats=self.adapt_stats())
 
     # ---- checkpoint serialization (daemon phase-boundary snapshots) ---- #
     def state_json(self, fence=None) -> dict:
@@ -198,6 +273,11 @@ class _Lane:
             st["fence"] = [str(fence[0]), int(fence[1])]
         if self.rng is not None:
             st["rng"] = self.rng.bit_generator.state
+        if self.est is not None:
+            # estimator state restores the exact learning trajectory, so
+            # a kill/restart replays the same probe caps and decisions
+            st["est"] = self.est.to_json()
+            st["est_redecisions"] = int(self.est_redecisions)
         return st
 
     def load_state(self, st: dict):
@@ -211,6 +291,9 @@ class _Lane:
         self.pend = _Pending.from_json(self.spec.profiles, st["pend"])
         if self.rng is not None and "rng" in st:
             self.rng.bit_generator.state = st["rng"]
+        if self.est is not None and "est" in st:
+            self.est = ProfileEstimator.from_json(st["est"])
+            self.est_redecisions = int(st.get("est_redecisions", 0))
         f = st.get("fence")
         return None if f is None else (str(f[0]), int(f[1]))
 
@@ -238,6 +321,11 @@ class _Action:
     # pass truncates the phase here so the decision re-fires on the newly
     # landed kernel. inf leaves the backlog arithmetic bit-identical.
     cap: float = np.inf
+    # predicted throughput (blocks/cycle) of each kernel under the lane's
+    # current estimate — adaptive lanes only; the charge pass compares
+    # these against observed drain rates to refine the estimator
+    pr1: Optional[float] = None
+    pr2: Optional[float] = None
 
 
 class WorkloadEngine:
@@ -284,8 +372,13 @@ class WorkloadEngine:
     def _lane_scheduler(self, spec: LaneSpec) -> Optional[KerneletScheduler]:
         if spec.policy not in SCHEDULED_POLICIES:
             return None
+        # unknown kernels decide on their prior profiles (the overlay
+        # changes the scheduler's content identity, so prior-informed
+        # decisions never share cache entries with true-profile ones)
+        profiles = ({**spec.profiles, **spec.priors} if spec.priors
+                    else spec.profiles)
         return self.scheduler_for(
-            spec.gpu, spec.profiles, alpha_p=spec.alpha_p,
+            spec.gpu, profiles, alpha_p=spec.alpha_p,
             alpha_m=spec.alpha_m, cp_margin=spec.cp_margin,
             decision_table=spec.truth if spec.policy == "OPT" else None)
 
@@ -294,9 +387,14 @@ class WorkloadEngine:
     def _predicted_service(lane: _Lane, name: str, blocks: float) -> float:
         """Predicted cycles to drain ``blocks`` of ``name`` served solo —
         the Markov-model (or, for oracle-mode lanes, measured) solo IPC as
-        the wait predictor, same arithmetic as ``_solo_phase``."""
-        prof = lane.spec.profiles[name]
+        the wait predictor, same arithmetic as ``_solo_phase``. Adaptive
+        lanes predict from the prior profile refined by the learned
+        scale — the p95 lever: a corrected service estimate re-orders
+        the EDF/PWAIT urgency ranking."""
+        prof = lane.dprofiles[name]
         ipc = lane.sched.solo_ipc(name)
+        if lane.est is not None:
+            ipc = ipc * lane.est.scale(name)
         return blocks * prof.insns_per_block / max(
             ipc * lane.spec.gpu.n_sm, 1e-12)
 
@@ -401,20 +499,35 @@ class WorkloadEngine:
             ranked = self._edf_rank(lane, act)
         elif spec.policy == "PWAIT-CP":
             ranked = self._pwait_rank(lane, act)
+        est = lane.est
+        scales = est.scales() if est is not None else None
         if ranked is not None:
-            cs = lane.sched.find_coschedule_ranked(ranked)
+            cs = lane.sched.find_coschedule_ranked(ranked, scales=scales)
         else:
-            cs = lane.sched.find_coschedule(act)
+            cs = lane.sched.find_coschedule(act, scales=scales)
         self.stats["decisions"] += 1
+        n_sm = spec.gpu.n_sm
         if cs.k2 is None:
+            # charge with the TRUE profile; the decision (slice size,
+            # predicted IPC) came from the prior-informed scheduler
             p1 = profiles[cs.k1]
-            return _Action(lane, "solo", f"solo:{cs.k1}", True, n1=cs.k1,
-                           p1=p1, b1=pend.blocks[cs.k1], s1=cs.s1)
+            a = _Action(lane, "solo", f"solo:{cs.k1}", True, n1=cs.k1,
+                        p1=p1, b1=pend.blocks[cs.k1], s1=cs.s1)
+            if est is not None:
+                a.pr1 = (cs.cipc1 * n_sm
+                         / lane.dprofiles[cs.k1].insns_per_block)
+            return a
         p1, p2 = profiles[cs.k1], profiles[cs.k2]
-        return _Action(lane, "co", f"co:{cs.k1}+{cs.k2}@{cs.w1}:{cs.w2}",
-                       True, n1=cs.k1, n2=cs.k2, p1=p1, p2=p2,
-                       w1=cs.w1, w2=cs.w2, s1=cs.s1, s2=cs.s2,
-                       b1=pend.blocks[cs.k1], b2=pend.blocks[cs.k2])
+        a = _Action(lane, "co", f"co:{cs.k1}+{cs.k2}@{cs.w1}:{cs.w2}",
+                    True, n1=cs.k1, n2=cs.k2, p1=p1, p2=p2,
+                    w1=cs.w1, w2=cs.w2, s1=cs.s1, s2=cs.s2,
+                    b1=pend.blocks[cs.k1], b2=pend.blocks[cs.k2])
+        if est is not None:
+            a.pr1 = (cs.cipc1 * n_sm
+                     / lane.dprofiles[cs.k1].insns_per_block)
+            a.pr2 = (cs.cipc2 * n_sm
+                     / lane.dprofiles[cs.k2].insns_per_block)
+        return a
 
     # ---- measurement phase: batch all lanes' lookups per table ---- #
     def _resolve_lookups(self, actions: Sequence[_Action]) -> None:
@@ -493,7 +606,10 @@ class WorkloadEngine:
         d1 = np.minimum(b1, thr1 * t)
         d2 = np.minimum(b2, thr2 * t)
         sl = d1 / np.maximum(s1, 1) + d2 / np.maximum(s2, 1)
-        return t + sl * lo, d1, d2, sl
+        # also return the pre-overhead drain time: observed throughput
+        # (online estimation) is drained blocks over execution time, with
+        # launch overhead excluded
+        return t + sl * lo, d1, d2, sl, t
 
     @staticmethod
     def _charge_solo(actions: List[_Action]):
@@ -520,7 +636,7 @@ class WorkloadEngine:
         thr = np.maximum(ipcs * n_sm, 1e-12) / ins
         d = np.where(truncated, np.minimum(b, thr * t), b)
         n_sl = np.where(ss > 0, d / np.maximum(ss, 1), 1.0)
-        return t + n_sl * lo, n_sl, d
+        return t + n_sl * lo, n_sl, d, t
 
     # ---- main loop ---- #
     def start(self, specs: Sequence[LaneSpec]) -> List[_Lane]:
@@ -565,13 +681,14 @@ class WorkloadEngine:
                 # controller ceiling (preempt/pause): never negative, so a
                 # stale cap_at cannot roll a lane clock backwards
                 a.cap = min(a.cap, max(a.lane.cap_at - a.lane.total, 0.0))
+            self._probe_cap(a)
         self._resolve_lookups(actions)
         co = [a for a in actions if a.kind == "co"]
         solo = [a for a in actions if a.kind == "solo"]
         self.stats["charged"] += len(actions)
         self.stats["charge_batches"] += (1 if co else 0) + (1 if solo else 0)
         if co:
-            t, d1, d2, sl = self._charge_co(co)
+            t, d1, d2, sl, t_ex = self._charge_co(co)
             for j, a in enumerate(co):
                 ln = a.lane
                 ln.pend.begin_phase(ln.total)
@@ -583,8 +700,9 @@ class WorkloadEngine:
                     ln.n_slices = ln.n_slices + sl[j]
                 ln.log.append((ln.total, a.event))
                 ln.pend.pop_completed(ln.total)
+                self._observe(a, t_ex[j], d1[j], d2[j])
         if solo:
-            t, n_sl, d = self._charge_solo(solo)
+            t, n_sl, d, t_ex = self._charge_solo(solo)
             for j, a in enumerate(solo):
                 ln = a.lane
                 ln.pend.begin_phase(ln.total)
@@ -594,7 +712,46 @@ class WorkloadEngine:
                     ln.n_slices = ln.n_slices + n_sl[j]
                 ln.log.append((ln.total, a.event))
                 ln.pend.pop_completed(ln.total)
+                self._observe(a, t_ex[j], d[j])
         return [ln for ln in active if ln.live()]
+
+    # ---- online learning hooks (adaptive lanes only) ---- #
+    @staticmethod
+    def _probe_cap(a: _Action) -> None:
+        """Truncate the phase to a probe window while any of its kernels'
+        estimates are unsettled: a wrong prior costs a short slice, the
+        observation lands, and the next decision re-fires against the
+        refined profile — the existing arrival/preemption cap machinery
+        as the preemption point. The window is a fraction of the
+        *predicted* phase duration (never of an arrival time), so the
+        t=0 == backlog pin extends to adaptive lanes."""
+        est = a.lane.est
+        if est is None or a.pr1 is None:
+            return
+        names = (a.n1,) if a.n2 is None else (a.n1, a.n2)
+        if all(est.settled(n) for n in names):
+            return
+        pred_t = a.b1 / max(a.pr1, 1e-12)
+        if a.n2 is not None:
+            pred_t = min(pred_t, a.b2 / max(a.pr2, 1e-12))
+        a.cap = min(a.cap, est.probe_window(pred_t))
+
+    @staticmethod
+    def _observe(a: _Action, t_ex: float, d1: float,
+                 d2: Optional[float] = None) -> None:
+        """Refine the lane's estimator from one charged phase: observed
+        throughput is drained blocks over pre-overhead execution time —
+        exact in the simulator, since phases drain at the truth table's
+        rate. Counts a re-decision when an estimate moved past the
+        re-slice threshold (the next phase decides differently)."""
+        est = a.lane.est
+        if est is None or a.pr1 is None or not t_ex > 0.0:
+            return
+        changed = est.observe(a.n1, d1 / t_ex, a.pr1)
+        if a.n2 is not None:
+            changed = est.observe(a.n2, d2 / t_ex, a.pr2) or changed
+        if changed:
+            a.lane.est_redecisions += 1
 
     def run(self, specs: Sequence[LaneSpec]) -> List[WorkloadResult]:
         """Drain every lane; returns one ``WorkloadResult`` per spec, in

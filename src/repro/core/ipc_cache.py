@@ -51,6 +51,7 @@ import json
 import os
 import re
 import tempfile
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 try:                                     # posix advisory locks; best-effort
@@ -78,11 +79,32 @@ def cache_dir() -> Optional[str]:
     return path
 
 
+# once per process: the implicit-json deprecation nag must not spam a
+# daemon that opens stores on every job
+_warned_implicit_backend = False
+
+
 def store_backend() -> str:
     """Selected artifact-store backend: ``json`` (default) or ``sqlite``
     (``REPRO_STORE_BACKEND``). Unknown values fall back to json — the
-    store is an optimization layer and must never refuse to start."""
-    raw = os.environ.get(ENV_BACKEND, "json").strip().lower()
+    store is an optimization layer and must never refuse to start.
+
+    An *unset* variable warns (once per process): the ROADMAP migration
+    plan flips the default to sqlite once the filename-keyed test pins
+    are migrated, so code relying on the implicit json default should
+    say ``REPRO_STORE_BACKEND=json`` out loud before that PR lands."""
+    global _warned_implicit_backend
+    raw = os.environ.get(ENV_BACKEND)
+    if raw is None:
+        if not _warned_implicit_backend:
+            _warned_implicit_backend = True
+            warnings.warn(
+                f"{ENV_BACKEND} is unset; defaulting to the json artifact"
+                "-store backend. This default will change to sqlite — set "
+                f"{ENV_BACKEND}=json explicitly to keep the current "
+                "behavior.", DeprecationWarning, stacklevel=2)
+        return "json"
+    raw = raw.strip().lower()
     return raw if raw in ("json", "sqlite") else "json"
 
 

@@ -37,29 +37,55 @@ class WorkloadResult:
     # arrival-timed lanes only: one (name, arrival, completion) record per
     # admitted kernel instance, in completion order (backlog lanes: empty)
     completions: list = dataclasses.field(default_factory=list)
+    # arrival-timed lanes: instances submitted (admitted or not). When set,
+    # it is the SLO-attainment denominator, so instances that never finish
+    # count as misses instead of silently inflating attainment.
+    n_expected: Optional[int] = None
+    # adaptive lanes only (repro/core/online.py): estimator convergence and
+    # re-decision counters; None for non-adaptive lanes
+    adapt_stats: Optional[dict] = None
 
-    def latency_metrics(self, slo_deadline: Optional[float] = None) -> dict:
+    def latency_metrics(self, slo_deadline: Optional[float] = None,
+                        *, n_expected: Optional[int] = None) -> dict:
         """Derived latency metrics over the per-instance completion records
         (arrival-timed lanes). Wait is the sojourn time — completion minus
         arrival — so it includes both queueing and service; completions are
         resolved at phase-end granularity (the event-log resolution).
         ``slo_attainment`` is the fraction of instances whose wait is
-        within ``slo_deadline`` cycles."""
+        within ``slo_deadline`` cycles; the denominator is ``n_expected``
+        when known (instances that never finished are misses), else the
+        completed count. Degenerate inputs are well-defined: zero
+        completions yield all-zero waits with no numpy warnings, a single
+        completion pins p50 == p95 == mean == max to that wait exactly."""
         waits = np.asarray([c - a for _, a, c in self.completions],
                            dtype=np.float64)
+        if n_expected is None:
+            n_expected = self.n_expected
         if waits.size == 0:
             out = {"n_completed": 0, "wait_p50": 0.0, "wait_p95": 0.0,
                    "wait_mean": 0.0, "wait_max": 0.0}
+        elif waits.size == 1:
+            w = float(waits[0])
+            out = {"n_completed": 1, "wait_p50": w, "wait_p95": w,
+                   "wait_mean": w, "wait_max": w}
         else:
             out = {"n_completed": int(waits.size),
                    "wait_p50": float(np.percentile(waits, 50)),
                    "wait_p95": float(np.percentile(waits, 95)),
                    "wait_mean": float(waits.mean()),
                    "wait_max": float(waits.max())}
+        if n_expected is not None:
+            out["n_expected"] = int(n_expected)
         if slo_deadline is not None:
             out["slo_deadline"] = float(slo_deadline)
-            out["slo_attainment"] = (
-                float(np.mean(waits <= slo_deadline)) if waits.size else 1.0)
+            met = int(np.count_nonzero(waits <= slo_deadline))
+            if n_expected is not None and int(n_expected) > 0:
+                out["slo_attainment"] = met / int(n_expected)
+            elif waits.size:
+                out["slo_attainment"] = met / int(waits.size)
+            else:
+                # nothing expected, nothing completed: vacuously met
+                out["slo_attainment"] = 1.0
         return out
 
 
@@ -351,7 +377,13 @@ def run_policy(policy: str, profiles: Dict[str, KernelProfile],
                arrivals: Optional[Sequence[float]] = None,
                slo_deadline: Optional[float] = None,
                deadlines: Optional[Sequence[float]] = None,
-               interpolate: bool = True) -> WorkloadResult:
+               interpolate: bool = True,
+               adapt: bool = False,
+               priors: Optional[Dict[str, KernelProfile]] = None,
+               adapt_alpha: float = 0.5,
+               reslice_threshold: float = 0.05,
+               adapt_min_conf: int = 2,
+               probe_frac: float = 0.25) -> WorkloadResult:
     """Drain one workload under one policy — a single-lane run of the
     vectorized workload engine (``repro.core.engine``), pinned bit-identical
     to the scalar ``run_policy_reference`` implementation by tests.
@@ -366,13 +398,23 @@ def run_policy(policy: str, profiles: Dict[str, KernelProfile],
 
     ``deadlines`` / ``slo_deadline`` attach per-instance deadlines (used
     by the EDF-KERNELET policy); ``interpolate=False`` reverts completion
-    timestamps to phase-end granularity."""
+    timestamps to phase-end granularity.
+
+    ``priors`` mark unknown kernels: the scheduler decides from the prior
+    profile while charging keeps the true physics in ``profiles``.
+    ``adapt=True`` additionally learns per-kernel throughput scales
+    online and re-slices as estimates settle (see
+    ``repro.core.online``); the learned state lands in
+    ``WorkloadResult.adapt_stats``."""
     from repro.core.engine import LaneSpec, WorkloadEngine
     spec = LaneSpec(policy=policy, profiles=profiles, order=order, gpu=gpu,
                     truth=truth, alpha_p=alpha_p, alpha_m=alpha_m,
                     seed=seed, mc_rng=mc_rng, arrivals=arrivals,
                     slo_deadline=slo_deadline, deadlines=deadlines,
-                    interpolate=interpolate)
+                    interpolate=interpolate, adapt=adapt, priors=priors,
+                    adapt_alpha=adapt_alpha,
+                    reslice_threshold=reslice_threshold,
+                    adapt_min_conf=adapt_min_conf, probe_frac=probe_frac)
     return WorkloadEngine().run([spec])[0]
 
 

@@ -20,6 +20,7 @@ import numpy as np
 from repro.core import ipc_cache, slicing
 from repro.core.markov import (MARKOV_SCHEMA, MarkovModel,
                                balanced_slice_sizes, co_scheduling_profit)
+from repro.core.online import effective_scales, scales_digest
 from repro.core.profiles import GPUSpec, KernelProfile, content_digest
 from repro.core.simulator import IPCTable
 
@@ -154,6 +155,17 @@ class KerneletScheduler:
                          for n in names)
         return f"{profs}|{self._param_key}"
 
+    @staticmethod
+    def _scale_fn(scales):
+        """name -> multiplicative IPC scale (identity when no estimates).
+        Scaling is applied to decision-side IPCs only — solo and pair
+        cIPCs — after the (scale-independent, memoized) Markov solves, so
+        a re-decision under refined estimates costs arithmetic, never a
+        new solve."""
+        if scales is None:
+            return lambda n: 1.0
+        return lambda n: scales.get(n, 1.0)
+
     # ---- decision-side IPCs (model, or table for OPT) ---- #
     def solo_ipc(self, name: str, w: Optional[int] = None) -> float:
         prof = self.profiles[name]
@@ -189,12 +201,17 @@ class KerneletScheduler:
             vals = self.model.pair_ipc_many(configs)
         self._pair_cache.update(zip(missing, vals))
 
-    def min_slice(self, name: str) -> int:
-        if name not in self._minslice_cache:
+    def min_slice(self, name: str, scale: float = 1.0) -> int:
+        # scale != 1.0 (online estimates) keys separately: a faster
+        # believed kernel amortizes its launch overhead over fewer
+        # blocks, so the 2%-budget floor genuinely moves with the scale
+        key = name if scale == 1.0 else (name, scale)
+        if key not in self._minslice_cache:
             prof = self.profiles[name]
-            self._minslice_cache[name] = slicing.min_slice_size(
-                prof, self.gpu, self.solo_ipc(name), self.p_overhead)
-        return self._minslice_cache[name]
+            self._minslice_cache[key] = slicing.min_slice_size(
+                prof, self.gpu, self.solo_ipc(name) * scale,
+                self.p_overhead)
+        return self._minslice_cache[key]
 
     # ---- pruning (§4.3) ---- #
     def prune(self, pairs):
@@ -232,27 +249,40 @@ class KerneletScheduler:
                 self.solo_ipc(n)
 
     # ---- FindCoSchedule ---- #
-    def find_coschedule(self, pending) -> Optional[CoSchedule]:
+    def find_coschedule(self, pending, *,
+                        scales=None) -> Optional[CoSchedule]:
         """pending: iterable of kernel names with blocks remaining.
 
         Decisions are memoized on the active *set*: profiles are fixed, so
         the pending names fully determine the result, and drain loops that
         call this every iteration pay for the search only when the set
-        changes."""
+        changes.
+
+        ``scales`` (online profile estimates: name -> multiplicative IPC
+        scale) folds into both cache keys — memo entries carry the scale
+        map, persistent keys take an ``est|<digest>|`` prefix — so a
+        refined estimate can never replay a decision taken under a stale
+        one, and scale-free callers keep their exact historical keys
+        (an all-1.0 map normalizes to scale-free)."""
         names = sorted(set(pending))
         if not names:
             return None
-        key = frozenset(names)
+        scales = effective_scales(scales)
+        dg = None if scales is None else scales_digest(scales)
+        key = (frozenset(names) if dg is None
+               else (frozenset(names), dg))
         hit = self._decision_cache.get(key)
         if hit is None:
             store = self._decision_store()
             skey = self._decision_skey(names) if store is not None else None
+            if skey is not None and dg is not None:
+                skey = f"est|{dg}|{skey}"
             if store is not None:
                 raw = store.get("coschedule", skey)
                 if raw is not None:
                     hit = CoSchedule.from_json(raw)
             if hit is None:
-                hit = self._search(names)
+                hit = self._search(names, scales=scales)
                 # persist any fresh Markov solves this search produced: the
                 # module-level solve cache already dedupes across the
                 # per-run_policy scheduler instances, the store dedupes
@@ -270,7 +300,8 @@ class KerneletScheduler:
         return hit
 
     # ---- urgency-ranked FindCoSchedule (arrival-aware policies) ---- #
-    def find_coschedule_ranked(self, ranked) -> Optional[CoSchedule]:
+    def find_coschedule_ranked(self, ranked, *,
+                               scales=None) -> Optional[CoSchedule]:
         """Deadline/wait-aware variant of ``find_coschedule``: ``ranked``
         is the active set ordered by urgency, head first (EDF slack, or
         predicted wait — computed by the caller). The head kernel is
@@ -284,22 +315,28 @@ class KerneletScheduler:
         into both cache keys: a replay with different deadlines can never
         be served a stale decision (the ``ranked|`` prefix also keeps
         these entries disjoint from the unordered ``find_coschedule``
-        family)."""
+        family). ``scales`` compounds exactly like in ``find_coschedule``
+        (``ranked|est|<digest>|`` persistent prefix)."""
         ranked = tuple(ranked)
         if not ranked:
             return None
-        key = ("ranked", ranked)
+        scales = effective_scales(scales)
+        dg = None if scales is None else scales_digest(scales)
+        key = (("ranked", ranked) if dg is None
+               else ("ranked", ranked, dg))
         hit = self._decision_cache.get(key)
         if hit is None:
             store = self._decision_store()
             skey = (f"ranked|{self._decision_skey(ranked)}"
                     if store is not None else None)
+            if skey is not None and dg is not None:
+                skey = f"ranked|est|{dg}|{self._decision_skey(ranked)}"
             if store is not None:
                 raw = store.get("coschedule", skey)
                 if raw is not None:
                     hit = CoSchedule.from_json(raw)
             if hit is None:
-                hit = self._search_ranked(ranked)
+                hit = self._search_ranked(ranked, scales=scales)
                 self.model.flush()
                 if store is not None:
                     store.put("coschedule", skey, hit.to_json())
@@ -307,15 +344,18 @@ class KerneletScheduler:
             self._decision_cache[key] = hit
         return hit
 
-    def _solo_schedule(self, name: str) -> CoSchedule:
+    def _solo_schedule(self, name: str, scales=None) -> CoSchedule:
+        sc = self._scale_fn(scales)
         w = self.profiles[name].active_units(self.vgpu)
-        return CoSchedule(name, None, w, 0, self.min_slice(name), 0, 0.0,
-                          self.solo_ipc(name), 0.0)
+        return CoSchedule(name, None, w, 0,
+                          self.min_slice(name, sc(name)), 0, 0.0,
+                          self.solo_ipc(name) * sc(name), 0.0)
 
-    def _search_ranked(self, ranked) -> CoSchedule:
+    def _search_ranked(self, ranked, scales=None) -> CoSchedule:
+        sc = self._scale_fn(scales)
         head = ranked[0]
         if len(ranked) == 1:
-            return self._solo_schedule(head)
+            return self._solo_schedule(head, scales)
         W = self.vgpu.units_per_sm
         wh_max = self.profiles[head].active_units(self.vgpu)
         # candidates in urgency order: strict `>` selection below keeps the
@@ -335,26 +375,29 @@ class KerneletScheduler:
         self._eval_pairs(cand)
         best, best_cp = None, -np.inf
         for h, wh, b, wb in cand:
-            ih, ib = self.solo_ipc(h), self.solo_ipc(b)
+            ih = self.solo_ipc(h) * sc(h)
+            ib = self.solo_ipc(b) * sc(b)
             c1, c2 = self._pair_cache[(h, wh, b, wb)]
+            c1, c2 = c1 * sc(h), c2 * sc(b)
             cp = co_scheduling_profit((ih, ib), (c1, c2))
             if cp > best_cp:
                 s1, s2 = balanced_slice_sizes(
                     self.profiles[h], c1, self.profiles[b], c2,
-                    self.min_slice(h), self.min_slice(b),
+                    self.min_slice(h, sc(h)), self.min_slice(b, sc(b)),
                     self.gpu.n_sm, w1=wh, w2=wb)
                 best = CoSchedule(h, b, wh, wb, s1, s2, cp, c1, c2)
                 best_cp = cp
         if best is None or best.cp <= self.cp_margin:
-            return self._solo_schedule(head)
+            return self._solo_schedule(head, scales)
         return best
 
-    def _search(self, names) -> CoSchedule:
+    def _search(self, names, scales=None) -> CoSchedule:
+        sc = self._scale_fn(scales)
         if len(names) == 1:
             n = names[0]
             w = self.profiles[n].active_units(self.vgpu)
-            ipc = self.solo_ipc(n)
-            return CoSchedule(n, None, w, 0, self.min_slice(n), 0,
+            ipc = self.solo_ipc(n) * sc(n)
+            return CoSchedule(n, None, w, 0, self.min_slice(n, sc(n)), 0,
                               0.0, ipc, 0.0)
         pairs = list(itertools.combinations(names, 2))
         kept = self.prune(pairs)
@@ -387,13 +430,15 @@ class KerneletScheduler:
         self._eval_pairs(cand)
         best, best_cp = None, -np.inf
         for a, wa, b, wb in cand:
-            ia, ib = self.solo_ipc(a), self.solo_ipc(b)
+            ia = self.solo_ipc(a) * sc(a)
+            ib = self.solo_ipc(b) * sc(b)
             c1, c2 = self._pair_cache[(a, wa, b, wb)]
+            c1, c2 = c1 * sc(a), c2 * sc(b)
             cp = co_scheduling_profit((ia, ib), (c1, c2))
             if cp > best_cp:
                 s1, s2 = balanced_slice_sizes(
                     self.profiles[a], c1, self.profiles[b], c2,
-                    self.min_slice(a), self.min_slice(b),
+                    self.min_slice(a, sc(a)), self.min_slice(b, sc(b)),
                     self.gpu.n_sm, w1=wa, w2=wb)
                 best = CoSchedule(a, b, wa, wb, s1, s2, cp, c1, c2)
                 best_cp = cp
@@ -401,6 +446,6 @@ class KerneletScheduler:
             # no pair predicted profitable -> run the head kernel solo
             n = names[0]
             w = self.profiles[n].active_units(self.vgpu)
-            return CoSchedule(n, None, w, 0, self.min_slice(n), 0, 0.0,
-                              self.solo_ipc(n), 0.0)
+            return CoSchedule(n, None, w, 0, self.min_slice(n, sc(n)), 0,
+                              0.0, self.solo_ipc(n) * sc(n), 0.0)
         return best

@@ -74,6 +74,44 @@ def make_skewed_workload(names, instances: int = 10, gap: float = 1.0,
     return order, arrivals
 
 
+def make_drifting_workload(profiles, instances: int = 10, lam: float = 1.0,
+                           seed: int = 0, drift: float = 0.5,
+                           jitter: float = 0.0):
+    """Arrival stream of *unknown* kernels: the online-adaptation case.
+
+    Every kernel's prior profile misestimates its per-block cost by a
+    deterministic multiplicative drift — alternating direction by name
+    order (kernel 0 believed ``(1+drift)``x cheaper per block than it
+    is, kernel 1 ``(1+drift)``x dearer, ...), which maximally scrambles
+    the *relative* speeds the slice balancing and the EDF/PWAIT service
+    predictions depend on. ``jitter`` adds a seeded uniform factor in
+    ``[1-jitter, 1+jitter]`` on top. Returns ``(order, arrivals,
+    priors)``: the Poisson stream of ``make_timed_workload`` plus the
+    prior ``KernelProfile`` map a ``LaneSpec(priors=...)`` (or daemon
+    job spec ``"priors"``) takes — an adaptive lane must learn back the
+    per-kernel throughput scale the drift took away."""
+    if drift < 0.0:
+        raise ValueError("drift must be >= 0")
+    if not 0.0 <= jitter < 1.0:
+        raise ValueError("jitter must be in [0, 1)")
+    names = sorted(profiles)
+    order, arrivals = make_timed_workload(names, instances=instances,
+                                          lam=lam, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    priors = {}
+    for i, n in enumerate(names):
+        # prior *underestimates* cost for even names (believed faster
+        # than real), overestimates for odd — the estimator's learned
+        # scale converges near 1/f
+        f = (1.0 / (1.0 + drift)) if i % 2 == 0 else (1.0 + drift)
+        if jitter:
+            f *= rng.uniform(1.0 - jitter, 1.0 + jitter)
+        p = profiles[n]
+        priors[n] = dataclasses.replace(
+            p, insns_per_block=p.insns_per_block * f)
+    return order, arrivals, priors
+
+
 def batch_keys(cfg) -> tuple:
     keys = ("tokens", "labels")
     if cfg.frontend == "vision_stub":

@@ -339,6 +339,12 @@ class ServingDaemon:
         truth = self._truth_for(gpu, int(spec.get("table_seed", 0)),
                                 int(spec.get("rounds", 12000)),
                                 bool(spec.get("persist", True)))
+        # unknown kernels (PR 9): ``priors`` carries a guessed profile
+        # per name — decisions predict from it while charging keeps the
+        # calibrated physics above; ``adapt`` turns on online learning
+        priors = spec.get("priors")
+        if priors:
+            priors = {n: KernelProfile(**f) for n, f in priors.items()}
         return LaneSpec(
             policy=spec["policy"], profiles=profiles,
             order=list(spec["order"]), gpu=gpu, truth=truth,
@@ -349,20 +355,29 @@ class ServingDaemon:
             arrivals=spec.get("arrivals"),
             slo_deadline=spec.get("slo_deadline"),
             deadlines=spec.get("deadlines"),
-            interpolate=bool(spec.get("interpolate", True)))
+            interpolate=bool(spec.get("interpolate", True)),
+            adapt=bool(spec.get("adapt", False)),
+            priors=priors or None,
+            adapt_alpha=float(spec.get("adapt_alpha", 0.5)),
+            reslice_threshold=float(spec.get("reslice_threshold", 0.05)),
+            adapt_min_conf=int(spec.get("adapt_min_conf", 2)),
+            probe_frac=float(spec.get("probe_frac", 0.25)))
 
     # ---- drain machinery ---- #
     @staticmethod
     def _result_dict(lane, phases: int, partial: bool = False) -> dict:
         res = lane.result()
-        return {"policy": res.policy,
-                "total_cycles": float(res.total_cycles),
-                "n_coschedules": int(res.n_coschedules),
-                "n_slices": float(res.n_slices),
-                "time_line": [[float(t), e] for t, e in res.time_line],
-                "completions": [[n, float(a), float(c)]
-                                for n, a, c in res.completions],
-                "phases": int(phases), "partial": bool(partial)}
+        out = {"policy": res.policy,
+               "total_cycles": float(res.total_cycles),
+               "n_coschedules": int(res.n_coschedules),
+               "n_slices": float(res.n_slices),
+               "time_line": [[float(t), e] for t, e in res.time_line],
+               "completions": [[n, float(a), float(c)]
+                               for n, a, c in res.completions],
+               "phases": int(phases), "partial": bool(partial)}
+        if res.adapt_stats is not None:
+            out["adapt_stats"] = res.adapt_stats
+        return out
 
     def _checkpoint(self, job_id: str, phase: int, lane,
                     fence=None) -> None:

@@ -81,16 +81,43 @@ def moore_hodgson_shed(jobs, now: float,
     order accumulating completion time at ``capacity`` (jobs served
     concurrently by the fleet); on an overrun, evict the scheduled job
     with the largest service (frees the most time per drop). The
-    evicted set is exactly the minimum number of late jobs."""
+    evicted set is exactly the minimum number of late jobs.
+
+    Jobs that are individually hopeless — they would miss their deadline
+    even starting right now with the whole fleet (notably zero/missing
+    ``est_service_s`` rows whose deadline already passed) — are shed
+    directly and never enter the eviction sweep. The classic rule would
+    otherwise keep the doomed job and evict the largest-service
+    *feasible* job in its place: eviction frees time proportional to
+    service, so dropping a zero-estimate job can never repair the
+    overrun it caused, and a job that would have met its deadline gets
+    cancelled for nothing.
+
+    Garbage estimates cannot corrupt the sweep: services clamp to
+    ``>= 0`` (a negative estimate would *subtract* fictional load from
+    the completion sum, hiding real overruns — and once services go
+    negative the self-eviction invariant above breaks, so a zero/bogus
+    estimate could then evict a feasible real-estimate job), NaN
+    services count as zero, and a NaN deadline reads as +inf (never
+    shed, but its load still counts)."""
     drop: List[str] = []
     heap: List[tuple] = []            # (-service, job_id) max-heap
     completion = 0.0
     cap = max(capacity, 1e-9)
     for jid, service, deadline in sorted(jobs,
                                          key=lambda r: (r[2], r[0])):
-        heapq.heappush(heap, (-float(service), jid))
-        completion += float(service) / cap
-        if now + completion > float(deadline) and heap:
+        s = float(service)
+        if not s >= 0.0:              # negative or NaN: clamp
+            s = 0.0
+        d = float(deadline)
+        if d != d:                    # NaN deadline: never shed
+            d = float("inf")
+        if now + s / cap > d:
+            drop.append(jid)          # hopeless alone: shed, don't evict
+            continue
+        heapq.heappush(heap, (-s, jid))
+        completion += s / cap
+        if now + completion > d and heap:
             neg_s, evicted = heapq.heappop(heap)
             completion += neg_s / cap          # neg_s < 0: time freed
             drop.append(evicted)
@@ -138,8 +165,19 @@ class PodFleet:
                  default_service_s: float = 1.0,
                  kill_process_after_phases: Optional[int] = None,
                  chaos: Optional[List[PodChaos]] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 clock=time.time):
         self.store_path = store_path
+        # THE fleet clock: every controller-side comparison (run timeout,
+        # journal stamps, lease-expiry scans, the shed pass) runs on this
+        # one injected clock. Pod clocks may be chaos-skewed — that models
+        # per-machine wall-clock drift, and fencing epochs keep pod *writes*
+        # safe — but irreversible fleet decisions (shedding a queued job to
+        # ``cancelled`` is not fence-protected) must never run on a skewed
+        # pod clock: a fast pod would cancel jobs whose deadlines are in
+        # fact comfortably meetable. Mixing ``time.monotonic()`` into the
+        # wait loops was the same bug in the other direction.
+        self.clock = clock
         self.n_pods = max(1, int(n_pods))
         self.lease_ttl = float(lease_ttl)
         self.ckpt_every = max(1, int(ckpt_every))
@@ -160,20 +198,20 @@ class PodFleet:
         self.seed = int(seed)
         self.name = f"fleet{next(_FLEET_SEQ)}-{os.getpid()}"
         self.pods: List[_Pod] = []
-        self.journal: List[tuple] = []  # (t_mono, pod_id, kind, payload)
+        self.journal: List[tuple] = []  # (t_fleet, pod_id, kind, payload)
         self.stats = {"store_faults": 0, "requeues": 0, "shed": 0,
                       "respawns": 0}
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._spawn_idx = 0
         self._total_phases = 0
-        self._store = JobStore(store_path)
+        self._store = JobStore(store_path, clock=clock)
 
     # ---- store access (controller thread / external callers) ---- #
     def open_store(self) -> JobStore:
         """A fresh, un-chaosed connection to the fleet's store (callers
         own it and must close it)."""
-        return JobStore(self.store_path)
+        return JobStore(self.store_path, clock=self.clock)
 
     def submit(self, job_id: str, spec: dict) -> None:
         self._store.create_job(job_id, spec)
@@ -185,7 +223,7 @@ class PodFleet:
     def _note(self, pod_id: str, kind: str, payload) -> None:
         with self._lock:
             self.journal.append(
-                (time.monotonic(), pod_id, kind, payload))
+                (self.clock(), pod_id, kind, payload))
 
     # ---- pod lifecycle ---- #
     def _spawn(self) -> _Pod:
@@ -194,9 +232,11 @@ class PodFleet:
         chaos = (self.chaos[idx]
                  if self.chaos is not None and idx < len(self.chaos)
                  else None)
-        clock = (ChaosClock(chaos.clock_skew_s)
+        # pod skew is relative to the fleet clock, so an injected fleet
+        # clock (tests) shifts the whole fleet coherently
+        clock = (ChaosClock(chaos.clock_skew_s, base=self.clock)
                  if chaos is not None and chaos.clock_skew_s else
-                 time.time)
+                 self.clock)
         pod = _Pod(f"{self.name}-p{idx}", clock, chaos,
                    random.Random((self.seed << 8) ^ idx))
         pod.thread = threading.Thread(target=self._worker, args=(pod,),
@@ -244,10 +284,20 @@ class PodFleet:
             deadline = spec.get("deadline_at")
             if deadline is None:
                 continue
-            cand.append((jid,
-                         float(spec.get("est_service_s",
-                                        self.default_service_s)),
-                         float(deadline)))
+            # an explicit null / unparsable estimate reads as "missing"
+            # (-> default), never as a TypeError that kills the monitor
+            # loop of whichever pod happens to scan the job first
+            est = spec.get("est_service_s")
+            try:
+                est = (self.default_service_s if est is None
+                       else float(est))
+            except (TypeError, ValueError):
+                est = self.default_service_s
+            try:
+                deadline = float(deadline)
+            except (TypeError, ValueError):
+                continue                  # unparsable deadline: never shed
+            cand.append((jid, est, deadline))
         if not cand:
             return []
         drop = moore_hodgson_shed(cand, now,
@@ -298,14 +348,19 @@ class PodFleet:
             while not self._stop.is_set():
                 progressed = False
                 try:
-                    expired = store.requeue_expired()
+                    # expiry is judged on the fleet clock, not this pod's
+                    # (possibly skewed) store clock: a fast pod must not
+                    # steal leases that have not actually expired
+                    expired = store.requeue_expired(now=self.clock())
                     if expired:
                         self._note(pod.pod_id, "requeue",
                                    [j for j, _, _ in expired])
                         with self._lock:
                             self.stats["requeues"] += len(expired)
                         progressed = True
-                    if self._shed_pass(store, pod.clock()):
+                    # shedding cancels jobs irreversibly (no fencing on the
+                    # queued->cancelled edge), so "now" is the fleet clock
+                    if self._shed_pass(store, self.clock()):
                         progressed = True
                     served = daemon.serve_once()
                     if served is not None:
@@ -356,13 +411,13 @@ class PodFleet:
         """Spawn the pods, respawn killed ones while budget remains,
         return the fleet summary once every job is terminal/parked (or
         the timeout passes — summary says which)."""
-        t_end = time.monotonic() + float(timeout_s)
+        t_end = self.clock() + float(timeout_s)
         self._stop.clear()
         self._recover_orphans()
         for _ in range(self.n_pods):
             self._spawn()
         try:
-            while time.monotonic() < t_end:
+            while self.clock() < t_end:
                 if self._fleet_idle(self._store):
                     break
                 if self.respawn:

@@ -10,6 +10,8 @@ Poisson streams: work conservation (every arrived instance completes
 exactly once), monotone completion times, sojourn >= 0, and
 latency-metric sanity. Kept jax-free (pure numpy) like the engine.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -444,3 +446,74 @@ def test_edf_pins_only_at_risk_feasible(no_persist, profiles, truth):
     lane = mk(None, dls=[1.0, 1e12, 1e12])           # CA already hopeless
     lane.pend.admit_until(0.0)
     assert eng._edf_rank(lane, lane.pend.active()) is None
+
+
+# ------------------------------------------------------------------ #
+# latency metrics on degenerate inputs (PR 9 bugfix sweep)
+# ------------------------------------------------------------------ #
+def test_latency_metrics_zero_completions_all_defined():
+    import warnings
+    from repro.core.queue import WorkloadResult
+    res = WorkloadResult("KERNELET", 0.0, 0, 0.0, [])
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # any numpy warning fails
+        m = res.latency_metrics(slo_deadline=100.0)
+    assert m == {"n_completed": 0, "wait_p50": 0.0, "wait_p95": 0.0,
+                 "wait_mean": 0.0, "wait_max": 0.0,
+                 "slo_deadline": 100.0, "slo_attainment": 1.0}
+
+
+def test_latency_metrics_single_completion_pins():
+    from repro.core.queue import WorkloadResult
+    res = WorkloadResult("KERNELET", 7.0, 0, 0.0, [],
+                         completions=[("CA", 2.0, 7.0)])
+    m = res.latency_metrics(slo_deadline=5.0)
+    assert m["n_completed"] == 1
+    assert (m["wait_p50"] == m["wait_p95"] == m["wait_mean"]
+            == m["wait_max"] == 5.0)
+    assert m["slo_attainment"] == 1.0
+    assert res.latency_metrics(slo_deadline=4.999)["slo_attainment"] == 0.0
+
+
+def test_latency_metrics_unfinished_instances_count_as_misses():
+    """Regression: SLO attainment divided by the *completed* count, so a
+    lane where most instances never finished reported a perfect SLO —
+    and a lane with zero completions reported attainment 1.0."""
+    from repro.core.queue import WorkloadResult
+    res = WorkloadResult("KERNELET", 7.0, 0, 0.0, [],
+                         completions=[("CA", 0.0, 1.0), ("CA", 0.0, 2.0)],
+                         n_expected=4)
+    m = res.latency_metrics(slo_deadline=100.0)
+    assert m["n_expected"] == 4
+    assert m["slo_attainment"] == 0.5        # 2 of 4 expected, both in SLO
+    # zero completions but expected work: attainment 0, not a vacuous 1
+    empty = WorkloadResult("KERNELET", 0.0, 0, 0.0, [], n_expected=3)
+    assert empty.latency_metrics(100.0)["slo_attainment"] == 0.0
+    # explicit override wins over the stored count
+    assert res.latency_metrics(100.0, n_expected=2)["slo_attainment"] == 1.0
+
+
+def test_aggregate_latency_pools_empty_lanes():
+    """FleetResult.latency pooling: all-empty and mixed empty/non-empty
+    lane sets yield well-defined pooled metrics (no NaN, no warnings),
+    and per-lane expected counts pool additively."""
+    import warnings
+    from repro.core.queue import WorkloadResult
+    empty = WorkloadResult("OPT", 0.0, 0, 0.0, [])
+    one = WorkloadResult("OPT", 3.0, 0, 0.0, [],
+                         completions=[("CA", 1.0, 3.0)])
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        m_all_empty = aggregate_latency([empty, empty], 10.0)
+        m_mixed = aggregate_latency([empty, one], 10.0)
+    assert m_all_empty["n_completed"] == 0
+    assert m_all_empty["wait_p95"] == 0.0
+    assert m_all_empty["slo_attainment"] == 1.0
+    assert m_mixed["n_completed"] == 1
+    assert m_mixed["wait_p95"] == 2.0
+    # expected counts pool: 1 of 3 expected finished -> attainment 1/3
+    exp = WorkloadResult("OPT", 0.0, 0, 0.0, [], n_expected=2)
+    pooled = aggregate_latency([exp, dataclasses.replace(one, n_expected=1)],
+                               10.0)
+    assert pooled["n_expected"] == 3
+    assert pooled["slo_attainment"] == pytest.approx(1.0 / 3.0)

@@ -303,9 +303,9 @@ def test_lanes_share_scheduler_searches(no_persist, profiles, truth,
     searches = []
     orig = KerneletScheduler._search
 
-    def spy(self, names):
+    def spy(self, names, scales=None):
         searches.append(tuple(names))
-        return orig(self, names)
+        return orig(self, names, scales=scales)
 
     monkeypatch.setattr(KerneletScheduler, "_search", spy)
     order = order_for(profiles)

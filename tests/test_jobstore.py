@@ -7,6 +7,7 @@ quarantine, factory dispatch). numpy-only — runs in the tier-1 CI tier.
 """
 import os
 import sqlite3
+import warnings
 
 import pytest
 
@@ -283,6 +284,23 @@ def test_open_store_backend_dispatch(tmp_path, monkeypatch):
     s = ipc_cache.open_store("s", ("k",), schema=1, dirname=str(tmp_path),
                              backend="sqlite")
     assert type(s) is SqliteArtifactStore
+
+
+def test_unset_backend_env_warns_deprecation_once(monkeypatch):
+    monkeypatch.delenv(ipc_cache.ENV_BACKEND, raising=False)
+    monkeypatch.setattr(ipc_cache, "_warned_implicit_backend", False)
+    with pytest.warns(DeprecationWarning, match=ipc_cache.ENV_BACKEND):
+        assert ipc_cache.store_backend() == "json"
+    # once per process: the second implicit call stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert ipc_cache.store_backend() == "json"
+    # an explicit setting never warns, even on a fresh process flag
+    monkeypatch.setattr(ipc_cache, "_warned_implicit_backend", False)
+    monkeypatch.setenv(ipc_cache.ENV_BACKEND, "json")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert ipc_cache.store_backend() == "json"
 
 
 def test_gc_collects_dead_sqlite_generations(tmp_path):

@@ -1,0 +1,461 @@
+"""Online profile learning tier (PR 9): ``repro.core.online`` and the
+engine's adaptive-lane machinery.
+
+Three contracts pinned here:
+
+  * **Learning.** The EWMA scale estimator converges geometrically on a
+    stable context, probe phases truncate until estimates settle, and
+    the learned state round-trips through checkpoints bit-identically.
+  * **Decision-cache identity.** Scaled decisions live in their own
+    ``est|<digest>|`` (and ``ranked|est|<digest>|``) persistent families
+    and scale-carrying memo keys: a refined profile can never replay a
+    stale plain/``ranked|`` entry, while ``adapt=False`` replays stay
+    cache-hits.
+  * **No-adaptation bit-identity.** ``adapt=False`` lanes — with or
+    without priors — are bit-identical to the pre-PR-9 engine, and the
+    t=0 == backlog pin extends to adaptive lanes (probe windows are
+    arrival-agnostic by construction).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import markov
+from repro.core.engine import (ADAPT_POLICIES, LaneSpec, WorkloadEngine,
+                               run_lanes)
+from repro.core.online import (ProfileEstimator, effective_scales,
+                               scales_digest)
+from repro.core.profiles import C2050, KernelProfile
+from repro.core.queue import make_workload, run_policy, run_policy_reference
+from repro.core.scheduler import KerneletScheduler, _decision_store_at
+from repro.core.simulator import IPCTable
+from repro.data.synthetic import make_drifting_workload
+
+GPU = C2050
+VG = GPU.virtual()
+ROUNDS = 300
+
+
+def prof(name, rm, coal=1.0, dep=0.0, blocks=64, ipb=200.0, occ=1.0,
+         pur=0.5, mur=0.1):
+    return KernelProfile(name, rm=rm, coal=coal, insns_per_block=ipb,
+                         num_blocks=blocks, occupancy=occ, pur=pur,
+                         mur=mur, dep_ratio=dep)
+
+
+@pytest.fixture(scope="module")
+def profiles():
+    return {
+        "CA": prof("CA", 0.05, pur=0.9, mur=0.02, blocks=60),
+        "CB": prof("CB", 0.08, dep=0.15, pur=0.6, mur=0.05, blocks=40,
+                   ipb=150.0),
+        "MA": prof("MA", 0.4, coal=0.3, pur=0.1, mur=0.25, blocks=80,
+                   ipb=300.0),
+        "MB": prof("MB", 0.3, pur=0.2, mur=0.2, blocks=50, ipb=250.0),
+    }
+
+
+@pytest.fixture()
+def no_persist(monkeypatch):
+    monkeypatch.setenv("REPRO_IPC_CACHE", "0")
+
+
+@pytest.fixture()
+def truth():
+    return IPCTable(VG, rounds=ROUNDS, persist=False)
+
+
+def drifted_priors(profiles, factor=2.0):
+    """Priors misestimating per-block cost: even names believed
+    ``factor``x cheaper than real, odd names ``factor``x dearer."""
+    out = {}
+    for i, n in enumerate(sorted(profiles)):
+        f = 1.0 / factor if i % 2 == 0 else factor
+        p = profiles[n]
+        out[n] = dataclasses.replace(p,
+                                     insns_per_block=p.insns_per_block * f)
+    return out
+
+
+def _fresh_decision_process():
+    markov._SOLVES.clear()
+    markov._store_at.cache_clear()
+    _decision_store_at.cache_clear()
+
+
+# ------------------------------------------------------------------ #
+# estimator unit behavior
+# ------------------------------------------------------------------ #
+def test_estimator_converges_geometrically():
+    # a tight threshold keeps the estimate live long enough to watch the
+    # whole geometric approach before the settle freeze kicks in
+    est = ProfileEstimator(["K"], alpha=0.5, reslice_threshold=1e-4,
+                           min_confidence=2)
+    assert est.scale("K") == 1.0 and not est.settled("K")
+    true_thr, model_thr = 3.0, 1.0       # true scale = 3.0
+    for _ in range(20):
+        est.observe("K", true_thr, model_thr * est.scale("K"))
+    # EWMA toward a fixed target: error decays monotonically...
+    errs = est.err_trace["K"]
+    assert all(errs[i + 1] <= errs[i] + 1e-12 for i in range(len(errs) - 1))
+    # ...to the true scale, and the kernel settles
+    assert est.scale("K") == pytest.approx(3.0, rel=1e-3)
+    assert est.settled("K")
+
+
+def test_estimator_freezes_on_settle():
+    est = ProfileEstimator(["K"], alpha=0.5, reslice_threshold=0.05,
+                           min_confidence=2)
+    while not est.settled("K"):
+        est.observe("K", 3.0, est.scale("K"))
+    frozen, n = est.scale("K"), est.n_updates
+    # settled within the threshold of truth, then frozen: even a wildly
+    # different observation (another co-execution context) is ignored
+    assert frozen == pytest.approx(3.0, rel=est.reslice_threshold)
+    assert not est.observe("K", 9.0, est.scale("K"))
+    assert est.scale("K") == frozen and est.n_updates == n
+
+
+def test_estimator_observation_guards():
+    est = ProfileEstimator(["K"])
+    assert not est.observe("unknown", 1.0, 1.0)   # untracked: no-op
+    assert not est.observe("K", 0.0, 1.0)         # empty phase: no signal
+    assert not est.observe("K", 1.0, 0.0)
+    assert est.n_updates == 0 and est.scale("K") == 1.0
+    # untracked kernels are trivially settled (never probed)
+    assert est.settled("unknown")
+
+
+def test_estimator_param_validation():
+    with pytest.raises(ValueError):
+        ProfileEstimator(["K"], alpha=0.0)
+    with pytest.raises(ValueError):
+        ProfileEstimator(["K"], alpha=1.5)
+    with pytest.raises(ValueError):
+        ProfileEstimator(["K"], reslice_threshold=-0.1)
+    with pytest.raises(ValueError):
+        ProfileEstimator(["K"], min_confidence=0)
+    with pytest.raises(ValueError):
+        ProfileEstimator(["K"], probe_frac=0.0)
+
+
+def test_estimator_json_roundtrip_exact():
+    est = ProfileEstimator(["A", "B"], alpha=0.3, reslice_threshold=0.02,
+                           min_confidence=3, probe_frac=0.5)
+    for i in range(5):
+        est.observe("A", 2.7, 1.0 * est.scale("A"))
+        est.observe("B", 0.4 + 0.01 * i, est.scale("B"))
+    back = ProfileEstimator.from_json(est.to_json())
+    assert back.to_json() == est.to_json()
+    assert back.scale("A") == est.scale("A")          # bit-identical
+    assert back.settled("A") == est.settled("A")
+    assert back.settled("B") == est.settled("B")
+    # "never observed" round-trips through the JSON None marker
+    fresh = ProfileEstimator.from_json(ProfileEstimator(["K"]).to_json())
+    assert not fresh.settled("K")
+
+
+def test_effective_scales_and_digest():
+    assert effective_scales(None) is None
+    assert effective_scales({}) is None
+    # the all-1.0 map is the scale-free normal form: a fresh estimator
+    # shares decision-cache identity with no estimator at all
+    assert effective_scales({"A": 1.0, "B": 1.0}) is None
+    assert effective_scales({"A": 1.0, "B": 2.0}) == {"B": 2.0}
+    assert ProfileEstimator(["A"]).scales() is None
+    d1 = scales_digest({"A": 2.0})
+    assert d1 == scales_digest({"A": 2.0}) and len(d1) == 16
+    assert d1 != scales_digest({"A": 2.0000000000000004})  # ulp-sensitive
+    assert d1 != scales_digest({"B": 2.0})
+
+
+# ------------------------------------------------------------------ #
+# engine integration: adaptive lanes
+# ------------------------------------------------------------------ #
+def test_adapt_requires_model_mode_policy(no_persist, profiles, truth):
+    for policy in ("BASE", "MC", "OPT"):
+        with pytest.raises(ValueError, match="adapt=True"):
+            WorkloadEngine().start(
+                [LaneSpec(policy, profiles, ["CA", "CB"], GPU, truth,
+                          adapt=True)])
+    assert "OPT" not in ADAPT_POLICIES
+
+
+@pytest.mark.parametrize("policy", ["BASE", "KERNELET", "OPT", "MC"])
+def test_adapt_off_bit_identical_to_reference(no_persist, profiles, truth,
+                                              policy):
+    """The adaptive machinery, switched off (the default), changes
+    nothing: every policy with a scalar oracle still reproduces it
+    bit-for-bit through the new code paths."""
+    order = make_workload(profiles, sorted(profiles), instances=3, seed=0)
+    ref = run_policy_reference(policy, profiles, order, GPU, truth, seed=3)
+    got = run_policy(policy, profiles, order, GPU, truth, seed=3,
+                     adapt=False)
+    assert got.total_cycles == ref.total_cycles
+    assert got.time_line == ref.time_line
+    assert got.n_slices == ref.n_slices
+    assert got.adapt_stats is None
+
+
+@pytest.mark.parametrize("policy", sorted(ADAPT_POLICIES))
+def test_t0_equals_backlog_for_adaptive_lanes(no_persist, profiles, truth,
+                                              policy):
+    """Probe windows are functions of predicted durations only — never
+    of arrival timestamps — so the t=0 == backlog bit-identity pin
+    extends to learning lanes."""
+    priors = drifted_priors(profiles)
+    order = make_workload(profiles, sorted(profiles), instances=3, seed=1)
+    t0 = run_lanes([LaneSpec(policy, profiles, order, GPU, truth,
+                             arrivals=[0.0] * len(order), adapt=True,
+                             priors=priors)])[0]
+    bk = run_lanes([LaneSpec(policy, profiles, order, GPU, truth,
+                             adapt=True, priors=priors)])[0]
+    assert t0.total_cycles == bk.total_cycles
+    assert t0.time_line == bk.time_line
+    assert t0.adapt_stats == bk.adapt_stats
+
+
+def test_probe_phases_truncate_until_settled(no_persist, profiles, truth):
+    """Unsettled estimates cost short probe slices, observations land,
+    and the estimator converges: prediction error at the end is far
+    below the drifted prior's initial error, every tracked kernel is
+    observed, and probing splits more phases than the frozen replay."""
+    priors = drifted_priors(profiles, factor=2.0)
+    order = make_workload(profiles, sorted(profiles), instances=3, seed=2)
+    adapted = run_lanes([LaneSpec("KERNELET", profiles, order, GPU, truth,
+                                  adapt=True, priors=priors)])[0]
+    frozen = run_lanes([LaneSpec("KERNELET", profiles, order, GPU, truth,
+                                 adapt=False, priors=priors)])[0]
+    st = adapted.adapt_stats
+    assert st is not None and frozen.adapt_stats is None
+    assert st["n_updates"] > 0
+    assert set(st["scales"]) == set(profiles)
+    for n in profiles:
+        errs = st["err_trace"][n]
+        assert errs, f"{n} was never observed"
+        if len(errs) >= 2:
+            assert errs[-1] < max(errs[0], 0.05)
+    # the learner re-decided at least once and paid probe truncations
+    assert st["n_redecisions"] >= 1
+    assert len(adapted.time_line) > len(frozen.time_line)
+
+
+def test_adaptive_lane_checkpoint_roundtrip(no_persist, profiles, truth):
+    """Kill/restart mid-learning is lossless: restoring a phase-boundary
+    snapshot (estimator state included) replays the identical remainder,
+    traces and all."""
+    priors = drifted_priors(profiles)
+    order = make_workload(profiles, sorted(profiles), instances=3, seed=4)
+    spec = LaneSpec("KERNELET", profiles, order, GPU, truth,
+                    adapt=True, priors=priors)
+    eng = WorkloadEngine()
+    lane = eng.start([spec])[0]
+    active = [lane]
+    for _ in range(5):                    # learn a little, then snapshot
+        active = eng.step(active)
+        assert active
+    snap = lane.state_json()
+    # resume in a fresh engine/lane from the snapshot
+    eng2 = WorkloadEngine()
+    lane2 = eng2.start([spec])[0]
+    lane2.load_state(snap)
+    assert lane2.est.to_json() == lane.est.to_json()
+    a1, a2 = [lane], [lane2]
+    while a1:
+        a1 = eng.step(a1)
+    while a2:
+        a2 = eng2.step(a2)
+    r1, r2 = lane.result(), lane2.result()
+    assert r2.total_cycles == r1.total_cycles
+    assert r2.time_line == r1.time_line
+    assert r2.adapt_stats == r1.adapt_stats
+
+
+def test_drifting_workload_generator(profiles):
+    order, arrivals, priors = make_drifting_workload(
+        profiles, instances=4, lam=1.0, seed=7, drift=0.5)
+    assert len(order) == len(arrivals) == 4 * len(profiles)
+    assert set(priors) == set(profiles)
+    names = sorted(profiles)
+    for i, n in enumerate(names):
+        f = priors[n].insns_per_block / profiles[n].insns_per_block
+        want = (1 / 1.5) if i % 2 == 0 else 1.5
+        assert f == pytest.approx(want)
+        # only the per-block cost drifts; physics fields stay true
+        assert priors[n].rm == profiles[n].rm
+        assert priors[n].num_blocks == profiles[n].num_blocks
+    # deterministic in the seed
+    again = make_drifting_workload(profiles, instances=4, lam=1.0, seed=7,
+                                   drift=0.5)
+    assert again[0] == order and again[1] == arrivals
+    with pytest.raises(ValueError):
+        make_drifting_workload(profiles, drift=-0.1)
+    with pytest.raises(ValueError):
+        make_drifting_workload(profiles, jitter=1.0)
+
+
+# ------------------------------------------------------------------ #
+# decision-cache identity under estimate drift (satellite)
+# ------------------------------------------------------------------ #
+def test_scaled_decisions_never_hit_plain_entries(profiles, tmp_path,
+                                                  monkeypatch):
+    """Plain and scaled decision families are disjoint in both cache
+    layers: a scheduler that has already persisted the plain entry for
+    an active set must still search when estimates apply — and its
+    scaled result must not shadow the plain entry for later scale-free
+    callers."""
+    monkeypatch.setenv("REPRO_IPC_CACHE", str(tmp_path))
+    names = sorted(profiles)
+    _fresh_decision_process()
+    sched = KerneletScheduler(GPU, profiles)
+    plain = sched.find_coschedule(names)
+
+    calls = []
+    orig = KerneletScheduler._search
+
+    def spy(self, ns, scales=None):
+        calls.append(scales)
+        return orig(self, ns, scales=scales)
+
+    monkeypatch.setattr(KerneletScheduler, "_search", spy)
+    # same process, same active set, new scales: memo must miss
+    scaled = sched.find_coschedule(names, scales={"CA": 1.5})
+    assert calls == [{"CA": 1.5}]
+    # repeated scaled call memo-hits; so does the plain one
+    assert sched.find_coschedule(names, scales={"CA": 1.5}) is scaled
+    assert sched.find_coschedule(names) is plain
+    assert calls == [{"CA": 1.5}]
+    # a *different* scale is again a different decision
+    sched.find_coschedule(names, scales={"CA": 1.6})
+    assert len(calls) == 2
+    # cold process: the persistent families stay disjoint too
+    _fresh_decision_process()
+    cold = KerneletScheduler(GPU, profiles)
+    monkeypatch.setattr(
+        KerneletScheduler, "_search",
+        lambda self, ns, scales=None: pytest.fail("stale-entry search"))
+    assert cold.find_coschedule(names).to_json() == plain.to_json()
+    assert (cold.find_coschedule(names, scales={"CA": 1.5}).to_json()
+            == scaled.to_json())
+
+
+def test_scaled_ranked_decisions_keyed_disjoint(profiles, tmp_path,
+                                                monkeypatch):
+    """Same disjointness for the urgency-ranked family: ``ranked|est|``
+    entries never collide with ``ranked|`` ones, and the all-1.0 scale
+    map normalizes to the plain ranked key."""
+    monkeypatch.setenv("REPRO_IPC_CACHE", str(tmp_path))
+    ranked = tuple(sorted(profiles))
+    _fresh_decision_process()
+    sched = KerneletScheduler(GPU, profiles)
+    plain = sched.find_coschedule_ranked(ranked)
+
+    calls = []
+    orig = KerneletScheduler._search_ranked
+
+    def spy(self, rk, scales=None):
+        calls.append(scales)
+        return orig(self, rk, scales=scales)
+
+    monkeypatch.setattr(KerneletScheduler, "_search_ranked", spy)
+    scaled = sched.find_coschedule_ranked(ranked, scales={"MA": 0.5})
+    assert calls == [{"MA": 0.5}]
+    # trivial scales normalize away: identical decision object, no search
+    assert sched.find_coschedule_ranked(
+        ranked, scales={n: 1.0 for n in ranked}) is plain
+    assert calls == [{"MA": 0.5}]
+    _fresh_decision_process()
+    cold = KerneletScheduler(GPU, profiles)
+    monkeypatch.setattr(
+        KerneletScheduler, "_search_ranked",
+        lambda self, rk, scales=None: pytest.fail("stale-entry search"))
+    assert cold.find_coschedule_ranked(ranked).to_json() == plain.to_json()
+    assert (cold.find_coschedule_ranked(
+        ranked, scales={"MA": 0.5}).to_json() == scaled.to_json())
+
+
+def test_adaptive_replay_cold_process_cache_hits(profiles, tmp_path,
+                                                 monkeypatch):
+    """A full adaptive run persists every decision under its est-digest
+    key, and the learning trajectory is deterministic — so a cold
+    process replaying the same lane reproduces it bit-identically
+    without a single search, scaled or plain."""
+    monkeypatch.setenv("REPRO_IPC_CACHE", str(tmp_path))
+    priors = drifted_priors(profiles)
+    order = make_workload(profiles, sorted(profiles), instances=3, seed=5)
+    truth = IPCTable(VG, rounds=ROUNDS, persist=False)
+    spec = LaneSpec("KERNELET", profiles, order, GPU, truth,
+                    adapt=True, priors=priors)
+    _fresh_decision_process()
+    first = run_lanes([spec])[0]
+    _fresh_decision_process()            # cold process: only disk is warm
+    monkeypatch.setattr(
+        KerneletScheduler, "_search",
+        lambda self, ns, scales=None: pytest.fail(
+            "cold adaptive replay ran the search"))
+    warm = run_lanes([spec])[0]
+    assert warm.total_cycles == first.total_cycles
+    assert warm.time_line == first.time_line
+    assert warm.adapt_stats == first.adapt_stats
+    _fresh_decision_process()
+
+
+def test_frozen_prior_replay_stays_cache_hit(profiles, tmp_path,
+                                             monkeypatch):
+    """``adapt=False`` with priors is an ordinary frozen replay: cold
+    processes reuse its (prior-profile-keyed) decisions search-free and
+    reproduce the run bit-identically — the prior overlay changes the
+    scheduler's content identity, never its caching behavior."""
+    monkeypatch.setenv("REPRO_IPC_CACHE", str(tmp_path))
+    priors = drifted_priors(profiles)
+    order = make_workload(profiles, sorted(profiles), instances=3, seed=6)
+    truth = IPCTable(VG, rounds=ROUNDS, persist=False)
+    spec = LaneSpec("KERNELET", profiles, order, GPU, truth,
+                    adapt=False, priors=priors)
+    _fresh_decision_process()
+    first = run_lanes([spec])[0]
+    _fresh_decision_process()
+    monkeypatch.setattr(
+        KerneletScheduler, "_search",
+        lambda self, ns, scales=None: pytest.fail(
+            "cold frozen replay ran the search"))
+    warm = run_lanes([spec])[0]
+    assert warm.total_cycles == first.total_cycles
+    assert warm.time_line == first.time_line
+    assert warm.adapt_stats is None
+    _fresh_decision_process()
+
+
+# ------------------------------------------------------------------ #
+# serving daemon: unknown-kernel job specs
+# ------------------------------------------------------------------ #
+def test_daemon_drains_unknown_kernel_job(no_persist, profiles, tmp_path):
+    """A job spec may mark kernels unknown (``priors`` instead of a
+    calibrated profile) and opt into learning (``adapt``): the daemon
+    drains it to FINISHED, and the result carries JSON-able adaptation
+    stats (learned scales, convergence traces)."""
+    import json
+
+    from repro.core.jobstore import FINISHED
+    from repro.runtime.daemon import ServingDaemon
+
+    priors = drifted_priors(profiles)
+    spec = {
+        "policy": "KERNELET",
+        "profiles": {n: dataclasses.asdict(p) for n, p in profiles.items()},
+        "priors": {n: dataclasses.asdict(p) for n, p in priors.items()},
+        "adapt": True,
+        "order": make_workload(profiles, sorted(profiles), instances=2,
+                               seed=8),
+        "gpu": "C2050", "rounds": ROUNDS, "table_seed": 0,
+        "persist": False,
+    }
+    d = ServingDaemon(str(tmp_path / "pod.sqlite"))
+    d.submit("unknown-job", spec)
+    assert d.run_until_idle() == {"unknown-job": FINISHED}
+    stats = d.store.result("unknown-job")["adapt_stats"]
+    json.dumps(stats)                     # JSON-able end to end
+    assert stats["n_updates"] > 0
+    assert set(stats["scales"]) == set(profiles)
+    d.close()

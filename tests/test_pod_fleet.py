@@ -213,6 +213,50 @@ def test_moore_hodgson_capacity_and_now_shift():
         == {"a", "b"}
 
 
+def test_moore_hodgson_zero_estimate_never_evicts_feasible():
+    """A zero-estimate job can never evict a real-estimate job that
+    would have met its deadline — pinned at the boundaries."""
+    # hopeless zero-estimate (deadline already passed) sheds itself;
+    # the feasible real-estimate job is untouched
+    assert moore_hodgson_shed([("zero", 0.0, -1.0), ("real", 5.0, 10.0)],
+                              now=0.0) == ["zero"]
+    # boundary: now + s/cap == deadline is feasible (strict overrun only)
+    assert moore_hodgson_shed([("edge", 5.0, 5.0)], now=0.0) == []
+    assert moore_hodgson_shed([("late", 5.0, 5.0)], now=0.5) == ["late"]
+    # a feasible zero-estimate job adds no load and is never shed
+    assert moore_hodgson_shed([("z", 0.0, 0.0), ("r", 1.0, 2.0)],
+                              now=0.0) == []
+
+
+def test_moore_hodgson_negative_estimate_cannot_mask_overload():
+    """Regression: a negative (garbage) estimate used to *subtract*
+    fictional load from the completion sum, so a job that could never
+    meet its deadline sailed through the sweep unshed."""
+    jobs = [("garbage", -10.0, 1.0), ("doomed", 5.0, 3.0)]
+    assert moore_hodgson_shed(jobs, now=0.0) == ["doomed"]
+    # NaN estimates/deadlines neither crash nor shed spuriously
+    nan = float("nan")
+    assert moore_hodgson_shed([("n1", nan, 10.0), ("n2", 1.0, nan)],
+                              now=0.0) == []
+
+
+def test_shed_pass_survives_null_estimate(tmp_path):
+    """Regression: ``est_service_s: null`` in a job spec raised
+    TypeError inside the shed pass, killing the monitor loop of
+    whichever pod scanned the job first."""
+    path = str(tmp_path / "null.sqlite")
+    fleet = PodFleet(path, n_pods=1, poll_s=0.005)
+    base = _fleet_jobs(1)["j0"]
+    fleet.submit("nullest", dict(base, deadline_at=time.time() + 3600.0,
+                                 est_service_s=None))
+    s = fleet.open_store()
+    try:
+        assert fleet._shed_pass(s, time.time()) == []
+    finally:
+        s.close()
+        fleet.close()
+
+
 # ---------------------------------------------------------------- #
 # fleet: stealing, shedding, failover, fault bursts
 # ---------------------------------------------------------------- #
@@ -255,6 +299,47 @@ def test_fleet_sheds_hopeless_deadline_jobs(tmp_path):
     s = JobStore(path)
     assert s.events("doomed")[-1][4].startswith("shed:")
     s.close()
+
+
+def test_skewed_pod_clock_cannot_shed_meetable_job(tmp_path):
+    """Regression: the shed pass ran on the serving pod's wall clock, so
+    a pod with a fast (chaos-skewed) clock cancelled queued jobs whose
+    deadlines were comfortably meetable on the real clock. Shedding is
+    irreversible (queued->cancelled has no fencing), so every shed
+    decision now runs on the one injected fleet clock."""
+    path = str(tmp_path / "skew.sqlite")
+    chaos = [PodChaos(clock_skew_s=3600.0)]
+    fleet = PodFleet(path, n_pods=1, poll_s=0.005, chaos=chaos)
+    base = _fleet_jobs(1)["j0"]
+    fleet.submit("meetable", dict(base, deadline_at=time.time() + 600.0,
+                                  est_service_s=1.0))
+    summary = fleet.run(timeout_s=120.0)
+    fleet.close()
+    assert summary["jobs"]["meetable"] == FINISHED
+    assert summary["stats"]["shed"] == 0
+
+
+def test_fleet_injected_clock_drives_run_timeout(tmp_path):
+    """The controller's run loop honors the injected fleet clock: with a
+    fake clock that jumps past the horizon on first read, ``run`` exits
+    by timeout instead of spinning on the real wall clock."""
+    path = str(tmp_path / "fake.sqlite")
+    calls = [0]
+
+    def fast_clock():                # gains ~12 days per read
+        calls[0] += 1
+        return calls[0] * 1e6
+
+    fleet = PodFleet(path, n_pods=1, poll_s=0.005, shed=False,
+                     clock=fast_clock)
+    fleet.submit("j0", _fleet_jobs(1)["j0"])
+    t0 = time.time()
+    fleet.run(timeout_s=30.0)
+    fleet.close()
+    # every fake-clock read blows past the horizon, so run() exits on
+    # its first loop check; had it consulted time.monotonic() instead,
+    # it would have spun the full 30 s serving on an insane clock
+    assert time.time() - t0 < 20.0
 
 
 def test_fleet_dead_pod_failover_and_respawn(tmp_path):
