@@ -26,6 +26,7 @@ bench-smoke:
 	$(PYTHON) -m benchmarks.fleet_hetero --smoke
 	$(PYTHON) -m benchmarks.pod_fleet --smoke
 	$(PYTHON) -m benchmarks.online_adaptation --smoke
+	$(PYTHON) -m benchmarks.power_throughput --smoke
 	$(MAKE) bench-gate
 
 # perf-regression gate: self-test (an injected 2x slowdown must fail),

@@ -197,7 +197,7 @@ def bench(instances: int = 12, rounds: int = 2500,
     }
     latency = {}
     for p, res in zip(POLICIES, results):
-        m = res.latency_metrics(slo_deadline=slo)
+        m = dict(res.latency_metrics(slo_deadline=slo))
         m["makespan_cycles"] = res.total_cycles
         m["throughput_per_mcycle"] = (
             m["n_completed"] / max(res.total_cycles, 1e-12) * 1e6)

@@ -47,6 +47,7 @@ import time
 
 from benchmarks import history_schema
 from repro.core.calibrate import calibrated_benchmarks
+from repro.core.online import AdaptConfig
 from repro.core.profiles import C2050
 from repro.core.queue import run_policy
 from repro.core.simulator import IPCTable
@@ -83,8 +84,9 @@ def _bench_convergence(profs, gpu, truth, *, drift: float,
     order, _, priors = make_drifting_workload(pair, instances=6, lam=1.0,
                                               seed=seed, drift=drift)
     res = run_policy(POLICY, pair, order, gpu, truth, seed=seed,
-                     adapt=True, priors=priors,
-                     adapt_min_conf=6, reslice_threshold=1e-3)
+                     adapt=AdaptConfig(min_confidence=6,
+                                       reslice_threshold=1e-3),
+                     priors=priors)
     st = res.adapt_stats
     firsts, lasts = [], []
     for n, tr in sorted(st["err_trace"].items()):

@@ -33,6 +33,11 @@ baseline would (the history's own consecutive same-box entries swing by
     Unlike the wall-clock lanes this is a ratio of simulated cycles, so
     it is exactly reproducible: any movement at all is a behavior
     change in the probe/observe/re-decision path, not noise.
+  * ``power_throughput`` / ``tpw_gain_kernelet`` (higher is better) —
+    KERNELET-vs-BASE throughput-per-watt on the tracked calibrated
+    backlog. A ratio of simulated joules, exactly reproducible like the
+    adaptation lane: movement means the watts accounting or the
+    scheduler's decisions changed, not the machine.
 
 A lane fails when it is more than ``tolerance`` (default 25%,
 ``REPRO_BENCH_GATE_TOL``) worse than the baseline. Wall-clock probes are
@@ -63,7 +68,8 @@ import statistics
 import sys
 
 from benchmarks import (daemon_recovery, decision_latency, fleet_hetero,
-                        online_adaptation, pod_fleet, replay_throughput)
+                        online_adaptation, pod_fleet, power_throughput,
+                        replay_throughput)
 
 REPORT_PATH = os.path.join("artifacts", "bench", "perf_gate.json")
 
@@ -129,6 +135,12 @@ def _probe_adaptation() -> float:
         instances=6, rounds=2500)["adaptation_gain_p95"])
 
 
+def _probe_power() -> float:
+    # the tracked history configuration, so the comparison is like-for-like
+    return float(power_throughput.bench(
+        instances=12, rounds=2500)["tpw_gain_kernelet"])
+
+
 # (lane name, history path, metric, better, probe)
 LANES = (
     ("decision_latency", decision_latency.HISTORY_PATH,
@@ -143,6 +155,8 @@ LANES = (
      "steal_jobs_per_s", "higher", _probe_pod_fleet),
     ("online_adaptation", online_adaptation.HISTORY_PATH,
      "adaptation_gain_p95", "higher", _probe_adaptation),
+    ("power_throughput", power_throughput.HISTORY_PATH,
+     "tpw_gain_kernelet", "higher", _probe_power),
 )
 
 

@@ -1,0 +1,238 @@
+"""Power/throughput benchmark: the watts model end to end and the
+POWERCAP policy's cap-vs-throughput trade.
+
+PR 10 gives the round-based SM simulator a per-unit activity -> watts
+model (static idle + stalled-unit draw over each round, per-issue and
+per-memory-request event energies, an uncoalesced-event premium) and
+threads the accounting through the measurement cache, the engine's
+charge passes, and the fleet aggregates. This bench pins the three
+claims the power story rests on, each asserted in-bench so a record can
+never enter the history with the model regressed:
+
+  * **Bit-identity** — the vectorized batched accounting in
+    ``simulate_many`` must produce *bit-for-bit* the same energy and
+    mean draw as the scalar ``simulate_reference``, for every config in
+    a mixed batch (the invariant that makes per-config watts caching
+    safe, exactly like the IPC fields).
+  * **Energy-efficiency of co-scheduling** — on the calibrated backlog
+    replay, KERNELET must beat BASE on throughput-per-watt: slicing
+    shortens the makespan, so the static idle energy the GPU burns
+    either way shrinks while the dynamic event energy stays fixed by
+    the work itself.
+  * **The cap gates, and only trades** — POWERCAP at a cap above the
+    solo draws (solo execution is never gated: the cap trades
+    co-scheduling throughput for power, it does not deny service) must
+    (a) keep its measured peak draw under the cap, (b) still beat BASE
+    on throughput-per-watt, and (c) shave the peak vs uncapped
+    KERNELET at the tracked configuration.
+
+Non-smoke runs append to ``benchmarks/history/power_throughput.jsonl``;
+``--smoke`` runs a reduced sweep and validates the record and history
+schema instead (the CI guard). The perf gate tracks
+``tpw_gain_kernelet`` (a ratio of simulated joules — deterministic, so
+any movement is a behavior change in the accounting or the scheduler,
+not noise).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks import history_schema
+from repro.core.calibrate import calibrated_benchmarks
+from repro.core.profiles import C2050, KernelProfile
+from repro.core.queue import make_workload, run_policy
+from repro.core.simulator import (IPCTable, simulate_many,
+                                  simulate_reference)
+
+HISTORY_PATH = os.path.join("benchmarks", "history",
+                            "power_throughput.jsonl")
+
+NAMES = ["PC", "TEA", "MM", "SPMV"]
+# the cap sits this far above the dearest measured solo draw: high
+# enough that serving is never denied, low enough that the dearest
+# co-schedules are gated off
+CAP_SOLO_MARGIN = 1.05
+
+REQUIRED_FIELDS = (
+    "instances", "rounds", "replay_s",
+    "energy_bit_identical", "n_bit_configs",
+    "base_energy_j", "kernelet_energy_j", "powercap_energy_j",
+    "base_tpw", "kernelet_tpw", "powercap_tpw",
+    "tpw_gain_kernelet", "tpw_gain_powercap",
+    "base_max_watts", "kernelet_max_watts", "powercap_max_watts",
+    "powercap_cap_w", "cap_respected", "cap_bites", "peak_reduction",
+    "n_cos_kernelet", "n_cos_powercap",
+)
+
+
+def _bench_bit_identity(gpu, rounds: int) -> dict:
+    """Mixed batch (steady-state, varied widths) through the vectorized
+    round loop vs the scalar reference, energy fields compared with
+    ``==`` — the accounting shares one expression tree over exact
+    integer event counts, so any drift is a real divergence."""
+    vg = gpu.virtual()
+
+    def prof(name, rm, coal, pur, mur, dep=0.0):
+        return KernelProfile(name, rm=rm, coal=coal, insns_per_block=200.0,
+                             num_blocks=64, occupancy=1.0, pur=pur,
+                             mur=mur, dep_ratio=dep)
+
+    cfgs = [
+        ([prof("A", 0.05, 1.0, 0.9, 0.02)], [4]),
+        ([prof("B", 0.4, 0.3, 0.1, 0.25),
+          prof("C", 0.08, 1.0, 0.6, 0.05, dep=0.15)], [2, 2]),
+        ([prof("D", 0.3, 0.5, 0.2, 0.2)], [3]),
+        ([prof("E", 0.5, 0.0, 0.1, 0.3),
+          prof("F", 0.02, 1.0, 0.8, 0.01)], [1, 3]),
+    ]
+    batch = simulate_many(cfgs, vg, seed=0, rounds=rounds)
+    for i, (ps, us) in enumerate(cfgs):
+        ref = simulate_reference(ps, us, vg, seed=0, rounds=rounds)
+        if (batch[i].energy_j != ref.energy_j
+                or batch[i].avg_watts != ref.avg_watts):
+            raise AssertionError(
+                f"batched energy diverged from the scalar reference on "
+                f"config {i}: {batch[i].energy_j!r} vs {ref.energy_j!r}")
+    return {"energy_bit_identical": True, "n_bit_configs": len(cfgs)}
+
+
+def bench(instances: int = 12, rounds: int = 2500, seed: int = 0) -> dict:
+    """One calibrated backlog workload, three lanes: BASE (serial
+    consolidation), KERNELET (free co-scheduling), POWERCAP (co-schedule
+    only under the cap). Throughput-per-watt = completed instances per
+    joule — simulated joules, so every ratio here is deterministic."""
+    gpu = C2050
+    profs_all = calibrated_benchmarks(gpu)
+    profs = {n: profs_all[n] for n in NAMES}
+    truth = IPCTable(gpu.virtual(), rounds=rounds, persist=False)
+
+    rec = {"instances": instances, "rounds": rounds}
+    rec.update(_bench_bit_identity(gpu, min(rounds, 500)))
+
+    order = make_workload(profs, NAMES, instances=instances, seed=seed)
+    n = len(order)
+
+    t_start = time.perf_counter()
+    base = run_policy("BASE", profs, order, gpu, truth, seed=seed)
+    knl = run_policy("KERNELET", profs, order, gpu, truth, seed=seed)
+    # cap just above the dearest solo draw (whole GPU): solos always fit,
+    # the dearest pairs do not
+    solo_peak = max(truth.solo_watts(profs[m]) * gpu.n_sm for m in NAMES)
+    cap = solo_peak * CAP_SOLO_MARGIN
+    pwr = run_policy("POWERCAP", profs, order, gpu, truth, seed=seed,
+                     power_cap=cap)
+    rec["replay_s"] = round(time.perf_counter() - t_start, 4)
+
+    em = {name: r.energy_metrics(n_instances=n)
+          for name, r in (("base", base), ("kernelet", knl),
+                          ("powercap", pwr))}
+    for name, m in em.items():
+        rec[f"{name}_energy_j"] = round(m["energy_j"], 4)
+        rec[f"{name}_tpw"] = round(m["throughput_per_watt"], 6)
+        rec[f"{name}_max_watts"] = round(m["max_watts"], 2)
+        rec[f"{name}_avg_watts"] = round(m["avg_watts"], 2)
+    rec.update({
+        "powercap_cap_w": round(cap, 2),
+        "cap_respected": pwr.max_watts <= cap,
+        # did the cap actually gate a decision? (at reduced smoke
+        # configurations every pair may already draw less than the
+        # dearest solo, leaving nothing to gate — still a valid record
+        # of the cap contract, just not of the trade)
+        "cap_bites": (pwr.n_coschedules != knl.n_coschedules
+                      or pwr.time_line != knl.time_line),
+        "tpw_gain_kernelet": round(
+            em["kernelet"]["throughput_per_watt"]
+            / em["base"]["throughput_per_watt"], 4),
+        "tpw_gain_powercap": round(
+            em["powercap"]["throughput_per_watt"]
+            / em["base"]["throughput_per_watt"], 4),
+        "peak_reduction": round(knl.max_watts / max(pwr.max_watts, 1e-12),
+                                4),
+        "n_cos_kernelet": knl.n_coschedules,
+        "n_cos_powercap": pwr.n_coschedules,
+    })
+
+    if not rec["cap_respected"]:
+        raise AssertionError(
+            f"POWERCAP exceeded its cap: peak {pwr.max_watts} W over "
+            f"cap {cap} W — the gate let a too-hot pair through")
+    if not rec["tpw_gain_kernelet"] > 1.0:
+        raise AssertionError(
+            "KERNELET must beat BASE on throughput-per-watt "
+            f"(got x{rec['tpw_gain_kernelet']}) — shorter makespans "
+            "burn less idle energy")
+    if not rec["tpw_gain_powercap"] >= 1.0:
+        raise AssertionError(
+            "POWERCAP fell below BASE on throughput-per-watt "
+            f"(x{rec['tpw_gain_powercap']}): the cap must trade peak "
+            "power for throughput, never burn extra energy")
+    if rec["cap_bites"] and not pwr.max_watts < knl.max_watts:
+        raise AssertionError(
+            "the cap gated decisions yet did not shave the peak vs "
+            f"uncapped KERNELET ({pwr.max_watts} vs {knl.max_watts} W) "
+            "— gating that buys no peak reduction is a gate bug")
+
+    rec["headline"] = {
+        "tpw_gain_kernelet": rec["tpw_gain_kernelet"],
+        "tpw_gain_powercap": rec["tpw_gain_powercap"],
+        "peak_reduction": rec["peak_reduction"],
+        "powercap_cap_w": rec["powercap_cap_w"],
+        "cap_respected": rec["cap_respected"],
+        "cap_bites": rec["cap_bites"],
+        "energy_bit_identical": rec["energy_bit_identical"],
+        "claim": "watts model end to end: batched energy is bit-identical "
+                 "to the scalar reference, co-scheduling pays in "
+                 "throughput-per-watt, and POWERCAP holds its cap while "
+                 "still beating serial execution",
+    }
+    validate_record(rec)
+    return rec
+
+
+DELTA_KEYS = ("tpw_gain_kernelet", "tpw_gain_powercap", "peak_reduction",
+              "kernelet_energy_j", "replay_s")
+
+
+def validate_record(rec: dict) -> None:
+    history_schema.validate_record(rec, REQUIRED_FIELDS,
+                                   "power_throughput")
+
+
+def validate_history(path: str = HISTORY_PATH) -> int:
+    return history_schema.validate_history(path, REQUIRED_FIELDS)
+
+
+def record_history(rec: dict, path: str = HISTORY_PATH) -> dict:
+    if not rec["cap_respected"]:
+        raise AssertionError("refusing to record: cap violated")
+    if not rec["cap_bites"]:
+        raise AssertionError(
+            "refusing to record: the tracked configuration must "
+            "actually exercise the power-cap gate")
+    if rec["tpw_gain_kernelet"] <= 1.0:
+        raise AssertionError(
+            "refusing to record: throughput-per-watt gain "
+            f"{rec['tpw_gain_kernelet']} is not a gain")
+    return history_schema.record_history(rec, path, DELTA_KEYS)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep; validate record + history schema "
+                         "instead of appending")
+    ap.add_argument("--instances", type=int, default=12)
+    ap.add_argument("--rounds", type=int, default=2500)
+    args = ap.parse_args()
+    if args.smoke:
+        rec = bench(instances=4, rounds=500)
+        n = validate_history()
+        print(json.dumps(rec["headline"], indent=1))
+        print(f"smoke OK: record schema valid, {n} history entries valid")
+    else:
+        rec = bench(instances=args.instances, rounds=args.rounds)
+        record_history(rec)
+        print(json.dumps(rec["headline"], indent=1))

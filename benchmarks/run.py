@@ -30,7 +30,8 @@ def main() -> None:
     from benchmarks import (arrival_latency, daemon_recovery,
                             decision_latency, fleet_hetero,
                             online_adaptation, pod_fleet,
-                            replay_throughput, tpu_coschedule)
+                            power_throughput, replay_throughput,
+                            tpu_coschedule)
 
     benches = dict(ALL_FIGS)
     benches["tpu_coschedule"] = tpu_coschedule.bench
@@ -41,6 +42,7 @@ def main() -> None:
     benches["fleet_hetero"] = fleet_hetero.bench
     benches["pod_fleet"] = pod_fleet.bench
     benches["online_adaptation"] = online_adaptation.bench
+    benches["power_throughput"] = power_throughput.bench
     if args.only:
         benches = {k: v for k, v in benches.items() if k == args.only}
 
@@ -65,6 +67,8 @@ def main() -> None:
             rec = fn(n_jobs=6, rounds=200)
         elif args.fast and name == "online_adaptation":
             rec = fn(instances=4, rounds=500)
+        elif args.fast and name == "power_throughput":
+            rec = fn(instances=4, rounds=500)
         else:
             rec = fn()
         dt = time.time() - t0
@@ -86,6 +90,8 @@ def main() -> None:
                 pod_fleet.record_history(rec)
             elif name == "online_adaptation":
                 online_adaptation.record_history(rec)
+            elif name == "power_throughput":
+                power_throughput.record_history(rec)
         print(f"{name},{dt * 1e6:.0f},{_headline_str(rec)}")
 
 

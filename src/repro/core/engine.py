@@ -59,25 +59,37 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import warnings
 from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.markov import MarkovModel
-from repro.core.online import ProfileEstimator
+from repro.core.online import AdaptConfig, ProfileEstimator
 from repro.core.profiles import GPUSpec, KernelProfile, content_digest
-from repro.core.queue import WorkloadResult, _Pending, _solo_phase
+from repro.core.queue import Metrics, WorkloadResult, _Pending, _solo_phase
 from repro.core.scheduler import KerneletScheduler
 from repro.core.simulator import IPCTable
 
-# policies that decide via a KerneletScheduler (model or oracle mode); the
-# last two are the arrival-aware family (deadline slack / predicted wait)
-SCHEDULED_POLICIES = ("KERNELET", "OPT", "EDF-KERNELET", "PWAIT-CP")
+# policies that decide via a KerneletScheduler (model or oracle mode).
+# EDF-KERNELET / PWAIT-CP are the arrival-aware family (deadline slack /
+# predicted wait); POWERCAP is KERNELET with the co-scheduling candidates
+# gated by a whole-GPU power budget (LaneSpec.power_cap) — with no cap set
+# it decides byte-identically to KERNELET.
+SCHEDULED_POLICIES = ("KERNELET", "OPT", "EDF-KERNELET", "PWAIT-CP",
+                      "POWERCAP")
 RANKED_POLICIES = ("EDF-KERNELET", "PWAIT-CP")
 # policies that can learn profiles online (LaneSpec.adapt): the model-mode
 # scheduled family. OPT decides on measured IPCs (nothing to learn), and
 # BASE/MC never consult a predicted profile at all.
-ADAPT_POLICIES = ("KERNELET", "EDF-KERNELET", "PWAIT-CP")
+ADAPT_POLICIES = ("KERNELET", "EDF-KERNELET", "PWAIT-CP", "POWERCAP")
+
+# LaneSpec kwargs superseded by AdaptConfig (PR 10): legacy name -> the
+# AdaptConfig field it maps to
+_LEGACY_ADAPT_KWARGS = {"adapt_alpha": "alpha",
+                        "reslice_threshold": "reslice_threshold",
+                        "adapt_min_conf": "min_confidence",
+                        "probe_frac": "probe_frac"}
 
 
 @dataclasses.dataclass
@@ -121,13 +133,45 @@ class LaneSpec:
     # ``ProfileEstimator`` that learns a per-kernel throughput scale from
     # each charged phase and probes (truncates) phases until estimates
     # settle; ``adapt=False`` with priors replays the frozen prior —
-    # bit-identical to the pre-PR-9 engine on the prior profiles.
-    adapt: bool = False
+    # bit-identical to the pre-PR-9 engine on the prior profiles. Tuned
+    # knobs ride an ``online.AdaptConfig``: ``adapt=AdaptConfig(...)``
+    # (the loose ``adapt_alpha``/... kwargs below are deprecated aliases,
+    # converted — with a DeprecationWarning — by ``__post_init__``).
+    adapt: Union[bool, AdaptConfig] = False
     priors: Optional[Dict[str, KernelProfile]] = None
-    adapt_alpha: float = 0.5
-    reslice_threshold: float = 0.05
-    adapt_min_conf: int = 2
-    probe_frac: float = 0.25
+    adapt_alpha: Optional[float] = None
+    reslice_threshold: Optional[float] = None
+    adapt_min_conf: Optional[int] = None
+    probe_frac: Optional[float] = None
+    # POWERCAP only: whole-GPU power budget in watts (per-vSM draw x
+    # n_sm). None = uncapped — the decision path is then byte-identical
+    # to KERNELET, including every cache key. Other policies ignore it.
+    power_cap: Optional[float] = None
+
+    def __post_init__(self):
+        legacy = {k: getattr(self, k) for k in _LEGACY_ADAPT_KWARGS
+                  if getattr(self, k) is not None}
+        if not legacy:
+            return
+        warnings.warn(
+            f"LaneSpec kwargs {sorted(legacy)} are deprecated; pass "
+            "adapt=AdaptConfig(...) instead (repro.core.online)",
+            DeprecationWarning, stacklevel=3)
+        if isinstance(self.adapt, AdaptConfig):
+            raise ValueError(
+                "pass adaptation knobs either via adapt=AdaptConfig(...) "
+                f"or the deprecated loose kwargs {sorted(legacy)}, not "
+                "both")
+        if self.adapt:
+            self.adapt = AdaptConfig(
+                **{_LEGACY_ADAPT_KWARGS[k]: v for k, v in legacy.items()})
+
+    def adapt_config(self) -> Optional[AdaptConfig]:
+        """The lane's resolved adaptation config: ``None`` when the lane
+        does not adapt, the historical defaults for ``adapt=True``."""
+        if isinstance(self.adapt, AdaptConfig):
+            return self.adapt
+        return AdaptConfig() if self.adapt else None
 
 
 @dataclasses.dataclass
@@ -142,13 +186,17 @@ class FleetResult:
     total_cycles: float
     n_coschedules: int
     n_slices: float
-    latency: Optional[dict] = None
+    latency: Optional[Metrics] = None
     deal: str = "round_robin"
     gpus: Optional[List[GPUSpec]] = None
+    # power model (PR 10): pooled energy metrics — always populated by
+    # ``run_fleet`` (energy accrues in every mode, unlike latency which
+    # needs arrival records)
+    energy: Optional[Metrics] = None
 
 
 def aggregate_latency(results: Sequence[WorkloadResult],
-                      slo_deadline: Optional[float] = None) -> dict:
+                      slo_deadline: Optional[float] = None) -> Metrics:
     """Pool every lane's per-instance completion records into one latency
     summary (same fields as ``WorkloadResult.latency_metrics``). Lane
     expected-instance counts pool additively (lanes without one — backlog
@@ -160,6 +208,27 @@ def aggregate_latency(results: Sequence[WorkloadResult],
                                          for c in r.completions],
                             n_expected=sum(known) if known else None)
     return pooled.latency_metrics(slo_deadline)
+
+
+def aggregate_energy(results: Sequence[WorkloadResult]) -> Metrics:
+    """Pool every lane's energy accounting into one fleet summary.
+    Energy pools additively; so do the lanes' time-averaged draws (fleet
+    lanes run concurrently, so the fleet's mean draw is the sum of lane
+    means); peak draw is the max over lanes (a per-lane, per-phase
+    quantity — concurrent peaks are not assumed to align). The
+    per-instance and throughput-per-watt ratios use the pooled completed
+    count and are ``None`` for backlog fleets (no instance records)."""
+    e = float(sum(r.energy_j for r in results))
+    aw = float(sum(r.avg_watts for r in results))
+    mw = float(max((r.max_watts for r in results), default=0.0))
+    n = sum(len(r.completions) for r in results)
+    epi = tpw = None
+    if n > 0:
+        epi = e / n
+        if e > 0.0:
+            tpw = n / e
+    return Metrics(energy_j=e, energy_per_instance=epi,
+                   throughput_per_watt=tpw, avg_watts=aw, max_watts=mw)
 
 
 class _Lane:
@@ -179,17 +248,14 @@ class _Lane:
         # pending ledger always use the true ``spec.profiles``)
         self.dprofiles = ({**spec.profiles, **spec.priors}
                           if spec.priors else spec.profiles)
-        if spec.adapt:
+        acfg = spec.adapt_config()
+        if acfg is not None:
             if spec.policy not in ADAPT_POLICIES:
                 raise ValueError(
                     f"adapt=True requires a model-mode scheduled policy "
                     f"{ADAPT_POLICIES}, not {spec.policy!r}")
             tracked = (spec.priors if spec.priors else spec.profiles)
-            self.est = ProfileEstimator(
-                tracked, alpha=spec.adapt_alpha,
-                reslice_threshold=spec.reslice_threshold,
-                min_confidence=spec.adapt_min_conf,
-                probe_frac=spec.probe_frac)
+            self.est = acfg.estimator(tracked)
         else:
             self.est = None
         # phases after which an estimate moved past the re-slice
@@ -199,6 +265,10 @@ class _Lane:
         self.total = 0.0
         self.n_cos = 0
         self.n_slices = 0.0
+        # power model (PR 10): joules accrued over charged phases (whole
+        # GPU), and the peak phase draw observed (watts, whole GPU)
+        self.energy_j = 0.0
+        self.max_watts = 0.0
         self.log: list = []
         # controller-set drain ceiling (daemon preempt/pause/cancel): the
         # charge pass truncates phases so the lane clock never passes it —
@@ -243,11 +313,19 @@ class _Lane:
         # attainment — never-finished instances count as misses
         n_exp = (len(self.spec.order) if self.spec.arrivals is not None
                  else None)
+        # mean draw over the lane clock (cycles -> seconds via the GPU
+        # frequency); idle fast-forward gaps draw nothing, so an
+        # arrival-timed lane's mean honestly reflects its duty cycle
+        hz = self.spec.gpu.freq_mhz * 1e6
+        avg_w = self.energy_j * hz / self.total if self.total > 0 else 0.0
         return WorkloadResult(self.spec.policy, self.total, self.n_cos,
                               self.n_slices, self.log,
                               completions=self.pend.completions,
                               n_expected=n_exp,
-                              adapt_stats=self.adapt_stats())
+                              adapt_stats=self.adapt_stats(),
+                              energy_j=float(self.energy_j),
+                              avg_watts=float(avg_w),
+                              max_watts=float(self.max_watts))
 
     # ---- checkpoint serialization (daemon phase-boundary snapshots) ---- #
     def state_json(self, fence=None) -> dict:
@@ -266,6 +344,8 @@ class _Lane:
             "total": float(self.total),
             "n_cos": int(self.n_cos),
             "n_slices": float(self.n_slices),
+            "energy_j": float(self.energy_j),
+            "max_watts": float(self.max_watts),
             "log": [[float(t), e] for t, e in self.log],
             "pend": self.pend.to_json(),
         }
@@ -287,6 +367,9 @@ class _Lane:
         self.total = float(st["total"])
         self.n_cos = int(st["n_cos"])
         self.n_slices = float(st["n_slices"])
+        # pre-PR-10 snapshots carry no energy ledger: restore as zero
+        self.energy_j = float(st.get("energy_j", 0.0))
+        self.max_watts = float(st.get("max_watts", 0.0))
         self.log = [(float(t), str(e)) for t, e in st["log"]]
         self.pend = _Pending.from_json(self.spec.profiles, st["pend"])
         if self.rng is not None and "rng" in st:
@@ -504,7 +587,12 @@ class WorkloadEngine:
         if ranked is not None:
             cs = lane.sched.find_coschedule_ranked(ranked, scales=scales)
         else:
-            cs = lane.sched.find_coschedule(act, scales=scales)
+            # POWERCAP is KERNELET with the pair candidates gated by the
+            # lane's power budget; a None cap keeps the exact KERNELET
+            # decision path (and cache keys) byte-for-byte
+            pcap = (spec.power_cap if spec.policy == "POWERCAP" else None)
+            cs = lane.sched.find_coschedule(act, scales=scales,
+                                            power_cap=pcap)
         self.stats["decisions"] += 1
         n_sm = spec.gpu.n_sm
         if cs.k2 is None:
@@ -582,20 +670,30 @@ class WorkloadEngine:
         """All lanes' co-exec phases at once: element-for-element the same
         float64 sequence as the scalar ``_coexec_phase``. A finite ``cap``
         (arrival-timed lanes) truncates the drain time at the lane's next
-        arrival; ``inf`` caps reproduce the scalar values bit-for-bit."""
+        arrival; ``inf`` caps reproduce the scalar values bit-for-bit.
+
+        The trailing energy outputs (phase joules and phase draw, whole
+        GPU) ride the same pass: execution cycles are charged at the
+        *measured* pair draw (cache hits from the same sweep that
+        measured the cIPCs), launch-overhead cycles at the idle draw."""
         get = np.asarray
         b1 = get([a.b1 for a in actions], dtype=np.float64)
         b2 = get([a.b2 for a in actions], dtype=np.float64)
-        cips = [a.lane.spec.truth.pair(a.p1, a.w1, a.p2, a.w2)
+        cips = [a.lane.spec.truth.pair_with_watts(a.p1, a.w1, a.p2, a.w2)
                 for a in actions]                       # cache hits
-        c1 = get([c[0] for c in cips], dtype=np.float64)
-        c2 = get([c[1] for c in cips], dtype=np.float64)
+        c1 = get([c[0][0] for c in cips], dtype=np.float64)
+        c2 = get([c[0][1] for c in cips], dtype=np.float64)
+        pw = get([c[1] for c in cips], dtype=np.float64)
         i1 = get([a.p1.insns_per_block for a in actions], dtype=np.float64)
         i2 = get([a.p2.insns_per_block for a in actions], dtype=np.float64)
         s1 = get([a.s1 for a in actions], dtype=np.float64)
         s2 = get([a.s2 for a in actions], dtype=np.float64)
         n_sm = get([a.lane.spec.gpu.n_sm for a in actions], dtype=np.float64)
         lo = get([a.lane.spec.gpu.launch_overhead for a in actions],
+                 dtype=np.float64)
+        iw = get([a.lane.spec.gpu.idle_watts for a in actions],
+                 dtype=np.float64)
+        hz = get([a.lane.spec.gpu.freq_mhz * 1e6 for a in actions],
                  dtype=np.float64)
         cap = get([a.cap for a in actions], dtype=np.float64)
         thr1 = c1 * n_sm / i1
@@ -606,10 +704,12 @@ class WorkloadEngine:
         d1 = np.minimum(b1, thr1 * t)
         d2 = np.minimum(b2, thr2 * t)
         sl = d1 / np.maximum(s1, 1) + d2 / np.maximum(s2, 1)
+        e = (pw * t + iw * (sl * lo)) * n_sm / hz
+        pwt = pw * n_sm
         # also return the pre-overhead drain time: observed throughput
         # (online estimation) is drained blocks over execution time, with
         # launch overhead excluded
-        return t + sl * lo, d1, d2, sl, t
+        return t + sl * lo, d1, d2, sl, t, e, pwt
 
     @staticmethod
     def _charge_solo(actions: List[_Action]):
@@ -622,12 +722,18 @@ class WorkloadEngine:
         get = np.asarray
         b = get([a.b1 for a in actions], dtype=np.float64)
         ins = get([a.p1.insns_per_block for a in actions], dtype=np.float64)
-        ipcs = get([a.lane.spec.truth.solo(
-                        a.p1, a.solo_w if a.solo_w is not None else None)
-                    for a in actions], dtype=np.float64)   # cache hits
+        vals = [a.lane.spec.truth.solo_with_watts(
+                    a.p1, a.solo_w if a.solo_w is not None else None)
+                for a in actions]                          # cache hits
+        ipcs = get([v[0] for v in vals], dtype=np.float64)
+        pw = get([v[1] for v in vals], dtype=np.float64)
         ss = get([a.s1 for a in actions], dtype=np.float64)
         n_sm = get([a.lane.spec.gpu.n_sm for a in actions], dtype=np.float64)
         lo = get([a.lane.spec.gpu.launch_overhead for a in actions],
+                 dtype=np.float64)
+        iw = get([a.lane.spec.gpu.idle_watts for a in actions],
+                 dtype=np.float64)
+        hz = get([a.lane.spec.gpu.freq_mhz * 1e6 for a in actions],
                  dtype=np.float64)
         cap = get([a.cap for a in actions], dtype=np.float64)
         t_full = b * ins / np.maximum(ipcs * n_sm, 1e-12)
@@ -636,7 +742,9 @@ class WorkloadEngine:
         thr = np.maximum(ipcs * n_sm, 1e-12) / ins
         d = np.where(truncated, np.minimum(b, thr * t), b)
         n_sl = np.where(ss > 0, d / np.maximum(ss, 1), 1.0)
-        return t + n_sl * lo, n_sl, d, t
+        e = (pw * t + iw * (n_sl * lo)) * n_sm / hz
+        pwt = pw * n_sm
+        return t + n_sl * lo, n_sl, d, t, e, pwt
 
     # ---- main loop ---- #
     def start(self, specs: Sequence[LaneSpec]) -> List[_Lane]:
@@ -688,13 +796,18 @@ class WorkloadEngine:
         self.stats["charged"] += len(actions)
         self.stats["charge_batches"] += (1 if co else 0) + (1 if solo else 0)
         if co:
-            t, d1, d2, sl, t_ex = self._charge_co(co)
+            t, d1, d2, sl, t_ex, e, pwt = self._charge_co(co)
             for j, a in enumerate(co):
                 ln = a.lane
                 ln.pend.begin_phase(ln.total)
                 ln.pend.drain(a.n1, d1[j])
                 ln.pend.drain(a.n2, d2[j])
                 ln.total = ln.total + t[j]
+                ln.energy_j += float(e[j])
+                if t_ex[j] > 0:
+                    # zero-length phases (cap already reached) never set
+                    # the peak: nothing actually drew the pair watts
+                    ln.max_watts = max(ln.max_watts, float(pwt[j]))
                 if a.count:
                     ln.n_cos += 1
                     ln.n_slices = ln.n_slices + sl[j]
@@ -702,12 +815,15 @@ class WorkloadEngine:
                 ln.pend.pop_completed(ln.total)
                 self._observe(a, t_ex[j], d1[j], d2[j])
         if solo:
-            t, n_sl, d, t_ex = self._charge_solo(solo)
+            t, n_sl, d, t_ex, e, pwt = self._charge_solo(solo)
             for j, a in enumerate(solo):
                 ln = a.lane
                 ln.pend.begin_phase(ln.total)
                 ln.pend.drain(a.n1, d[j])
                 ln.total = ln.total + t[j]
+                ln.energy_j += float(e[j])
+                if t_ex[j] > 0:
+                    ln.max_watts = max(ln.max_watts, float(pwt[j]))
                 if a.count:
                     ln.n_slices = ln.n_slices + n_sl[j]
                 ln.log.append((ln.total, a.event))
@@ -971,7 +1087,8 @@ def run_fleet(policy: str, profiles: Dict[str, KernelProfile],
               deadlines: Optional[Sequence[float]] = None,
               interpolate: bool = True,
               deal: Union[str, DealPolicy] = "auto",
-              gpus: Optional[Sequence[GPUSpec]] = None) -> FleetResult:
+              gpus: Optional[Sequence[GPUSpec]] = None,
+              power_cap: Optional[float] = None) -> FleetResult:
     """Replay one arrival stream over a fleet of GPUs: the stream is split
     by ``deal`` (see ``resolve_deal`` — round-robin in backlog mode,
     least-predicted-backlog under arrivals, or any ``DealPolicy``
@@ -1000,7 +1117,11 @@ def run_fleet(policy: str, profiles: Dict[str, KernelProfile],
 
     MC lanes draw from per-lane streams spawned via
     ``np.random.SeedSequence(seed).spawn``, so no two (seed, lane) pairs
-    can collide the way the old ``seed + g`` derivation did."""
+    can collide the way the old ``seed + g`` derivation did.
+
+    ``power_cap`` (watts, per GPU) arms POWERCAP lanes' co-scheduling
+    gate; the result always carries pooled energy metrics
+    (``FleetResult.energy``) regardless of policy or cap."""
     lane_gpus = _fleet_gpus(gpu, n_gpus, gpus)
     n_gpus = len(lane_gpus)
     if n_gpus < 1:
@@ -1041,7 +1162,7 @@ def run_fleet(policy: str, profiles: Dict[str, KernelProfile],
                       slo_deadline=slo_deadline,
                       deadlines=(None if deadlines is None
                                  else [deadlines[i] for i in part]),
-                      interpolate=interpolate)
+                      interpolate=interpolate, power_cap=power_cap)
              for g, part in enumerate(parts)]
     results = eng.run(specs)
     return FleetResult(
@@ -1054,4 +1175,5 @@ def run_fleet(policy: str, profiles: Dict[str, KernelProfile],
         latency=(aggregate_latency(results, slo_deadline)
                  if arrivals is not None else None),
         deal=dealer.name,
-        gpus=list(lane_gpus))
+        gpus=list(lane_gpus),
+        energy=aggregate_energy(results))

@@ -22,8 +22,9 @@ Layout:  <cache_dir>/<name>_v<schema>.json
          {"schema": <int>, "kinds": {"<kind>": {"<key>": value, ...}, ...}}
 
 (IPC files keep their historical flat layout for compatibility:
-``ipc_v<schema>_<gpu digest>_s<seed>_r<rounds>.json`` with top-level
-``solo``/``pair`` dicts.)
+``ipc_v<schema>_<gpu digest>_s<seed>_r<rounds>.json`` with one top-level
+dict per kind — ``solo``/``pair`` IPCs plus the ``solo_w``/``pair_w``
+per-config watts the same sweeps measure.)
 
 ``cache_dir`` defaults to ``artifacts/ipc_cache`` under the current working
 directory and is overridable via the ``REPRO_IPC_CACHE`` environment
@@ -32,14 +33,15 @@ entirely (in-memory caching still applies).
 
 Two on-disk backends implement the same store contract:
 
-  * **json** (default) — one whole file per (name, schema), rewritten
-    atomically on every save (tmp file + fsync + ``os.replace``, so a
-    crash mid-save can never tear the file). Simple and diffable, but a
-    save costs O(total entries) — the known hot-table rewrite.
-  * **sqlite** (``REPRO_STORE_BACKEND=sqlite``) — one SQLite file per
-    (name, schema), saves upsert only the entries written since the last
-    save: O(dirty), which is what the serving daemon's eager
-    save-per-decision loop needs. See ``repro.core.jobstore``.
+  * **sqlite** (default) — one SQLite file per (name, schema), saves
+    upsert only the entries written since the last save: O(dirty), which
+    is what the serving daemon's eager save-per-decision loop needs. See
+    ``repro.core.jobstore``.
+  * **json** (``REPRO_STORE_BACKEND=json``) — one whole file per
+    (name, schema), rewritten atomically on every save (tmp file + fsync
+    + ``os.replace``, so a crash mid-save can never tear the file).
+    Simple and diffable, but a save costs O(total entries) — the known
+    hot-table rewrite.
 
 ``open_store`` / ``open_ipc_cache`` are the backend-dispatching
 constructors; every store family (ipc / markov / calib / decisions) goes
@@ -51,7 +53,6 @@ import json
 import os
 import re
 import tempfile
-import warnings
 from typing import Dict, List, Optional, Sequence
 
 try:                                     # posix advisory locks; best-effort
@@ -66,7 +67,9 @@ ENV_BACKEND = "REPRO_STORE_BACKEND"
 DEFAULT_DIR = os.path.join("artifacts", "ipc_cache")
 
 # bump when simulator physics change in a way that alters measurements
-_SCHEMA = 1
+# (v2: power model — GPUSpec power coefficients fold into content digests,
+# and IPC files carry per-config watts next to the IPC values)
+_SCHEMA = 2
 
 
 def cache_dir() -> Optional[str]:
@@ -79,33 +82,19 @@ def cache_dir() -> Optional[str]:
     return path
 
 
-# once per process: the implicit-json deprecation nag must not spam a
-# daemon that opens stores on every job
-_warned_implicit_backend = False
-
-
 def store_backend() -> str:
-    """Selected artifact-store backend: ``json`` (default) or ``sqlite``
-    (``REPRO_STORE_BACKEND``). Unknown values fall back to json — the
-    store is an optimization layer and must never refuse to start.
-
-    An *unset* variable warns (once per process): the ROADMAP migration
-    plan flips the default to sqlite once the filename-keyed test pins
-    are migrated, so code relying on the implicit json default should
-    say ``REPRO_STORE_BACKEND=json`` out loud before that PR lands."""
-    global _warned_implicit_backend
+    """Selected artifact-store backend: ``sqlite`` (the default since
+    PR 10 — O(dirty) saves instead of whole-file rewrites) or ``json``
+    via ``REPRO_STORE_BACKEND=json``. Unknown values fall back to the
+    default — the store is an optimization layer and must never refuse
+    to start. Both backends share the content-addressed key scheme, so
+    switching is always safe: the other backend's files are simply cold
+    (see docs/operations.md for the migration note)."""
     raw = os.environ.get(ENV_BACKEND)
     if raw is None:
-        if not _warned_implicit_backend:
-            _warned_implicit_backend = True
-            warnings.warn(
-                f"{ENV_BACKEND} is unset; defaulting to the json artifact"
-                "-store backend. This default will change to sqlite — set "
-                f"{ENV_BACKEND}=json explicitly to keep the current "
-                "behavior.", DeprecationWarning, stacklevel=2)
-        return "json"
+        return "sqlite"
     raw = raw.strip().lower()
-    return raw if raw in ("json", "sqlite") else "json"
+    return raw if raw in ("json", "sqlite") else "sqlite"
 
 
 def open_store(name: str, kinds: Sequence[str], schema: int = 1,
@@ -397,8 +386,10 @@ class TypedIPCAccess:
     both IPC backends (``IPCCache`` and ``jobstore.SqliteIPCCache``)."""
 
     def get(self, kind: str, prof_ws):
-        """kind: 'solo' | 'pair'; prof_ws: [(profile, w), ...]. Returns the
-        cached float / (cipc1, cipc2) tuple, or None on miss."""
+        """kind: 'solo' | 'pair' | 'solo_w' | 'pair_w'; prof_ws:
+        [(profile, w), ...]. Returns the cached float — or, for the exact
+        kind 'pair', the (cipc1, cipc2) tuple — or None on miss (the
+        watts kinds are single floats for both arities)."""
         val = super().get(kind, _entry_key(prof_ws))
         if val is None:
             return None
@@ -409,10 +400,15 @@ class TypedIPCAccess:
                     list(value) if kind == "pair" else float(value))
 
 
+# the store kinds every IPC backend carries: IPC values plus the matching
+# per-config mean draw (``*_w``) written by the same measurement sweep
+IPC_KINDS = ("solo", "pair", "solo_w", "pair_w")
+
+
 class IPCCache(TypedIPCAccess, ArtifactStore):
     """One on-disk IPC table per (gpu, seed, rounds). Keeps the historical
-    flat file layout (top-level ``solo``/``pair`` dicts, schema in the file
-    name) and the prof_ws-keyed get/put API on top of ``ArtifactStore``."""
+    flat file layout (top-level per-kind dicts, schema in the file name)
+    and the prof_ws-keyed get/put API on top of ``ArtifactStore``."""
 
     def __init__(self, gpu: GPUSpec, seed: int, rounds: int,
                  path: Optional[str] = None):
@@ -421,15 +417,15 @@ class IPCCache(TypedIPCAccess, ArtifactStore):
         if base is not None:
             fpath = os.path.join(base,
                                  ipc_store_name(gpu, seed, rounds) + ".json")
-        super().__init__("ipc", ("solo", "pair"), schema=_SCHEMA,
+        super().__init__("ipc", IPC_KINDS, schema=_SCHEMA,
                          path=fpath)
 
-    # historical flat layout: {"solo": {...}, "pair": {...}} with the schema
+    # historical flat layout: one top-level dict per kind with the schema
     # version carried by the file name instead of a field
     def _decode(self, raw) -> Optional[dict]:
-        if (isinstance(raw, dict) and isinstance(raw.get("solo"), dict)
-                and isinstance(raw.get("pair"), dict)):
-            return {"solo": raw["solo"], "pair": raw["pair"]}
+        if (isinstance(raw, dict)
+                and all(isinstance(raw.get(k), dict) for k in IPC_KINDS)):
+            return {k: raw[k] for k in IPC_KINDS}
         return None
 
     def _encode(self, data: dict) -> dict:

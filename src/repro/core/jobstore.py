@@ -849,5 +849,5 @@ class SqliteIPCCache(ipc_cache.TypedIPCAccess, SqliteArtifactStore):
             fpath = os.path.join(
                 base, ipc_cache.ipc_store_name(gpu, seed, rounds)
                 + ".sqlite")
-        super().__init__("ipc", ("solo", "pair"), schema=ipc_cache._SCHEMA,
-                         path=fpath)
+        super().__init__("ipc", ipc_cache.IPC_KINDS,
+                         schema=ipc_cache._SCHEMA, path=fpath)

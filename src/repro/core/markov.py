@@ -40,8 +40,9 @@ import numpy as np
 from repro.core import ipc_cache
 from repro.core.profiles import GPUSpec, KernelProfile, content_digest
 
-# bump when the model physics change in a way that alters solved IPCs
-MARKOV_SCHEMA = 1
+# bump when the model physics change in a way that alters solved values
+# (v2: solves carry the predicted mean draw next to the IPCs)
+MARKOV_SCHEMA = 2
 
 # Module-level solve cache: keyed on the frozen (gpu, three_state, profiles,
 # splits) value tuples, so solves are deduped across every MarkovModel
@@ -133,6 +134,8 @@ class MarkovModel:
 
     # ---- solve-cache plumbing (module memo + persistent store) ---- #
     def _cached_solve(self, kind, mem_key, prof_ws, solve):
+        """Solved values are tuples for both kinds since MARKOV_SCHEMA 2:
+        ``single`` -> (ipc, watts), ``pair`` -> (cipc1, cipc2, watts)."""
         hit = _SOLVES.get(mem_key)
         if hit is not None:
             return hit
@@ -142,14 +145,13 @@ class MarkovModel:
         if store is not None:
             raw = store.get(kind, skey)
             if raw is not None:
-                val = tuple(raw) if kind == "pair" else float(raw)
+                val = tuple(raw)
                 _SOLVES[mem_key] = val
                 return val
         val = solve()
         _SOLVES[mem_key] = val
         if store is not None:
-            store.put(kind, skey,
-                      list(val) if kind == "pair" else float(val))
+            store.put(kind, skey, list(val))
         return val
 
     def flush(self) -> None:
@@ -282,15 +284,45 @@ class MarkovModel:
         pi = np.clip(pi, 0.0, None)
         return pi / pi.sum()
 
+    def _predicted_watts(self, profs, ws, ready_k, round_d, pi) -> float:
+        """Steady-state mean draw (watts, one virtual SM) under the same
+        activity -> energy accounting as the simulator: static idle +
+        stalled-unit watts over each state's round duration, per-issue
+        energy for every ready unit, and the expected per-issue memory
+        energy from the raw profile's request rate and coalescing (an
+        uncoalesced event pays ``uncoal_factor * uncoal_penalty`` times
+        the coalesced request energy, matching the simulator's per-event
+        weights in expectation)."""
+        g = self.gpu
+        ue = g.req_energy * g.uncoal_factor * g.uncoal_penalty
+        mem_e = np.array([p.rm * (p.coal * g.req_energy
+                                  + (1.0 - p.coal) * ue)
+                          for p in profs])
+        ready_tot = ready_k.sum(axis=0)
+        stall = float(sum(ws)) - ready_tot
+        per_round = ((g.idle_watts + g.stall_watts * stall) * round_d
+                     + g.issue_energy * ready_tot + mem_e @ ready_k)
+        return float(pi @ per_round) / float(pi @ round_d)
+
     # ---- public API ---- #
     def single_ipc(self, prof: KernelProfile, w: Optional[int] = None) -> float:
         """Modeled IPC, Eq. 4 (scaled by peak_ipc to the paper's axis)."""
+        return self._solve_single(prof, w)[0]
+
+    def single_power(self, prof: KernelProfile,
+                     w: Optional[int] = None) -> float:
+        """Predicted mean draw (watts, one virtual SM) of the solo config —
+        solved (and cached) together with its IPC."""
+        return self._solve_single(prof, w)[1]
+
+    def _solve_single(self, prof: KernelProfile, w: Optional[int] = None):
         w = w if w is not None else prof.active_units(self.gpu)
 
         def solve():
             P, ready, rd = self._build([prof], [w])
             pi = self._steady_state(P)
-            return float(pi @ ready[0]) / float(pi @ rd) * self.gpu.peak_ipc
+            ipc = float(pi @ ready[0]) / float(pi @ rd) * self.gpu.peak_ipc
+            return (ipc, self._predicted_watts([prof], [w], ready, rd, pi))
 
         return self._cached_solve(
             "single", (self.gpu, self.three_state, prof, w),
@@ -299,13 +331,26 @@ class MarkovModel:
     def pair_ipc(self, p1: KernelProfile, w1: int, p2: KernelProfile,
                  w2: int):
         """(cIPC_1, cIPC_2), Eqs. 5-7."""
+        val = self._solve_pair(p1, w1, p2, w2)
+        return (val[0], val[1])
 
+    def pair_power(self, p1: KernelProfile, w1: int, p2: KernelProfile,
+                   w2: int) -> float:
+        """Predicted mean draw (watts, one virtual SM) of the co-resident
+        pair config — one value for the pair, same shape as the measured
+        ``IPCTable.pair_watts``."""
+        return self._solve_pair(p1, w1, p2, w2)[2]
+
+    def _solve_pair(self, p1: KernelProfile, w1: int, p2: KernelProfile,
+                    w2: int):
         def solve():
             P, ready, rd = self._build([p1, p2], [w1, w2])
             pi = self._steady_state(P)
             cyc = float(pi @ rd)
             return (float(pi @ ready[0]) / cyc * self.gpu.peak_ipc,
-                    float(pi @ ready[1]) / cyc * self.gpu.peak_ipc)
+                    float(pi @ ready[1]) / cyc * self.gpu.peak_ipc,
+                    self._predicted_watts([p1, p2], [w1, w2], ready, rd,
+                                          pi))
 
         return self._cached_solve(
             "pair", (self.gpu, self.three_state, p1, w1, p2, w2),

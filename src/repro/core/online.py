@@ -33,8 +33,34 @@ effective scales) shares the plain family byte-for-byte.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 from typing import Dict, Iterable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptConfig:
+    """Online-adaptation knobs, grouped (PR 10 API consolidation).
+
+    One value object instead of four loose ``adapt_*`` kwargs on
+    ``LaneSpec``/``run_policy``: construct with any subset overridden —
+    ``AdaptConfig(alpha=0.3)`` — and pass as ``LaneSpec(adapt=cfg)``.
+    Frozen so a config can sit inside the (hashable, comparable)
+    ``LaneSpec`` identity and be shared across lanes safely. Field
+    semantics are exactly ``ProfileEstimator``'s ctor knobs; defaults
+    are the historical ones, so ``AdaptConfig() == adapt=True``
+    bit-for-bit."""
+    alpha: float = 0.5
+    reslice_threshold: float = 0.05
+    min_confidence: int = 2
+    probe_frac: float = 0.25
+
+    def estimator(self, tracked: Iterable[str]) -> "ProfileEstimator":
+        return ProfileEstimator(
+            tracked, alpha=self.alpha,
+            reslice_threshold=self.reslice_threshold,
+            min_confidence=self.min_confidence,
+            probe_frac=self.probe_frac)
 
 
 def effective_scales(scales: Optional[Dict[str, float]]

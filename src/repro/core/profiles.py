@@ -48,6 +48,21 @@ class GPUSpec:
                                # dual-issue peak of 8 is not reachable by
                                # these kernels — single-issue peak is 4
     freq_mhz: float = 1000.0
+    # ---- power model (PR 10; Goswami et al., arXiv 2011.02368) ---- #
+    # Per-(virtual-)SM activity -> watts coefficients. Static draw is in
+    # watts; dynamic event energies are in *watt-cycles* (1 watt-cycle =
+    # 1 / (freq_mhz * 1e6) joules), so the simulator's per-round accrual
+    # is exact integer-count arithmetic and avg_watts = acc / cycles
+    # needs no frequency term. idle_watts is a power of two on purpose:
+    # idle * int_cycles is exact in float64, pinning the zero-activity
+    # draw to exactly idle_watts.
+    idle_watts: float = 8.0    # static W per virtual SM (always drawn)
+    stall_watts: float = 0.5   # W per unit parked in a stall class
+    issue_energy: float = 2.0  # watt-cycles per issued instruction
+    req_energy: float = 40.0   # watt-cycles per coalesced memory request
+    uncoal_penalty: float = 1.5  # extra energy multiplier per uncoalesced
+                                 # *event* (on top of the uncoal_factor x
+                                 # request amplification)
 
     @property
     def peak_eff(self) -> float:

@@ -17,14 +17,74 @@ survivor drains solo, and every slice launch pays the launch overhead.
 from __future__ import annotations
 
 import collections
+import collections.abc
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.profiles import GPUSpec, KernelProfile
 from repro.core.scheduler import CoSchedule, KerneletScheduler
 from repro.core.simulator import IPCTable
+
+
+@dataclasses.dataclass(eq=False)
+class Metrics(collections.abc.Mapping):
+    """Typed metric bundle shared by the latency and energy reporting
+    paths (PR 10 API consolidation): ``latency_metrics()``,
+    ``FleetResult.latency``/``.energy`` and ``energy_metrics()`` all
+    return one of these instead of ad-hoc dicts.
+
+    Implements the ``Mapping`` protocol over its *populated* fields
+    (``None`` means "not applicable to this lane", exactly like the old
+    dicts' absent keys), so existing consumers — ``m["wait_p50"]``,
+    ``"slo_attainment" in m``, ``dict(m)``, ``m.items()``, ``**m`` — keep
+    working unchanged, and flattened history field names stay stable.
+    ``m["absent"]`` raises ``KeyError`` just as the old dicts did, and
+    equality holds against any mapping with the same populated entries
+    (including plain-dict golden pins and other ``Metrics``)."""
+    n_completed: Optional[int] = None
+    wait_p50: Optional[float] = None
+    wait_p95: Optional[float] = None
+    wait_mean: Optional[float] = None
+    wait_max: Optional[float] = None
+    n_expected: Optional[int] = None
+    slo_deadline: Optional[float] = None
+    slo_attainment: Optional[float] = None
+    energy_j: Optional[float] = None
+    energy_per_instance: Optional[float] = None
+    throughput_per_watt: Optional[float] = None
+    avg_watts: Optional[float] = None
+    max_watts: Optional[float] = None
+
+    def to_dict(self) -> dict:
+        """Populated fields only — the exact dict the pre-PR-10 callers
+        received (JSON-safe; use for serialization)."""
+        return {f.name: v for f in dataclasses.fields(self)
+                if (v := getattr(self, f.name)) is not None}
+
+    def __getitem__(self, key):
+        if key not in {f.name for f in dataclasses.fields(self)}:
+            raise KeyError(key)
+        v = getattr(self, key)
+        if v is None:
+            raise KeyError(key)
+        return v
+
+    def __iter__(self):
+        return iter(self.to_dict())
+
+    def __len__(self):
+        return len(self.to_dict())
+
+    def __eq__(self, other):
+        if isinstance(other, Metrics):
+            return self.to_dict() == other.to_dict()
+        if isinstance(other, collections.abc.Mapping):
+            return self.to_dict() == dict(other)
+        return NotImplemented
+
+    __hash__ = None
 
 
 @dataclasses.dataclass
@@ -44,9 +104,16 @@ class WorkloadResult:
     # adaptive lanes only (repro/core/online.py): estimator convergence and
     # re-decision counters; None for non-adaptive lanes
     adapt_stats: Optional[dict] = None
+    # power model (PR 10): lane energy in joules (integral of the measured
+    # draw over every charged phase + idle launch overheads), the
+    # time-averaged draw over the busy cycles, and the peak phase draw —
+    # all for the whole GPU (per-vSM watts x n_sm)
+    energy_j: float = 0.0
+    avg_watts: float = 0.0
+    max_watts: float = 0.0
 
     def latency_metrics(self, slo_deadline: Optional[float] = None,
-                        *, n_expected: Optional[int] = None) -> dict:
+                        *, n_expected: Optional[int] = None) -> "Metrics":
         """Derived latency metrics over the per-instance completion records
         (arrival-timed lanes). Wait is the sojourn time — completion minus
         arrival — so it includes both queueing and service; completions are
@@ -86,7 +153,25 @@ class WorkloadResult:
             else:
                 # nothing expected, nothing completed: vacuously met
                 out["slo_attainment"] = 1.0
-        return out
+        return Metrics(**out)
+
+    def energy_metrics(self, n_instances: Optional[int] = None) -> "Metrics":
+        """Derived energy metrics (power model, PR 10). ``n_instances``
+        (completed instances; defaults to the completion-record count)
+        feeds the per-instance and throughput-per-watt ratios — both are
+        ``None`` when the lane has no instance accounting (backlog lanes
+        replayed without arrivals)."""
+        if n_instances is None:
+            n_instances = len(self.completions) or None
+        epi = tpw = None
+        if n_instances is not None and int(n_instances) > 0:
+            epi = self.energy_j / int(n_instances)
+            if self.energy_j > 0.0:
+                tpw = int(n_instances) / self.energy_j
+        return Metrics(energy_j=float(self.energy_j),
+                       energy_per_instance=epi, throughput_per_watt=tpw,
+                       avg_watts=float(self.avg_watts),
+                       max_watts=float(self.max_watts))
 
 
 def make_workload(profiles: Dict[str, KernelProfile], names: List[str],
@@ -378,12 +463,13 @@ def run_policy(policy: str, profiles: Dict[str, KernelProfile],
                slo_deadline: Optional[float] = None,
                deadlines: Optional[Sequence[float]] = None,
                interpolate: bool = True,
-               adapt: bool = False,
+               adapt: Union[bool, "AdaptConfig"] = False,
                priors: Optional[Dict[str, KernelProfile]] = None,
-               adapt_alpha: float = 0.5,
-               reslice_threshold: float = 0.05,
-               adapt_min_conf: int = 2,
-               probe_frac: float = 0.25) -> WorkloadResult:
+               adapt_alpha: Optional[float] = None,
+               reslice_threshold: Optional[float] = None,
+               adapt_min_conf: Optional[int] = None,
+               probe_frac: Optional[float] = None,
+               power_cap: Optional[float] = None) -> WorkloadResult:
     """Drain one workload under one policy — a single-lane run of the
     vectorized workload engine (``repro.core.engine``), pinned bit-identical
     to the scalar ``run_policy_reference`` implementation by tests.
@@ -402,10 +488,15 @@ def run_policy(policy: str, profiles: Dict[str, KernelProfile],
 
     ``priors`` mark unknown kernels: the scheduler decides from the prior
     profile while charging keeps the true physics in ``profiles``.
-    ``adapt=True`` additionally learns per-kernel throughput scales
-    online and re-slices as estimates settle (see
-    ``repro.core.online``); the learned state lands in
-    ``WorkloadResult.adapt_stats``."""
+    ``adapt=True`` (or an ``online.AdaptConfig`` for tuned knobs)
+    additionally learns per-kernel throughput scales online and
+    re-slices as estimates settle (see ``repro.core.online``); the
+    learned state lands in ``WorkloadResult.adapt_stats``. The loose
+    ``adapt_alpha``/``reslice_threshold``/``adapt_min_conf``/
+    ``probe_frac`` kwargs are deprecated aliases for an ``AdaptConfig``.
+
+    ``power_cap`` (watts, whole GPU) arms the POWERCAP policy's
+    co-scheduling gate; ignored by other policies."""
     from repro.core.engine import LaneSpec, WorkloadEngine
     spec = LaneSpec(policy=policy, profiles=profiles, order=order, gpu=gpu,
                     truth=truth, alpha_p=alpha_p, alpha_m=alpha_m,
@@ -414,7 +505,8 @@ def run_policy(policy: str, profiles: Dict[str, KernelProfile],
                     interpolate=interpolate, adapt=adapt, priors=priors,
                     adapt_alpha=adapt_alpha,
                     reslice_threshold=reslice_threshold,
-                    adapt_min_conf=adapt_min_conf, probe_frac=probe_frac)
+                    adapt_min_conf=adapt_min_conf, probe_frac=probe_frac,
+                    power_cap=power_cap)
     return WorkloadEngine().run([spec])[0]
 
 

@@ -120,6 +120,7 @@ class KerneletScheduler:
                           if cp_margin is None else cp_margin)
         self._solo_cache: Dict = {}
         self._pair_cache: Dict = {}
+        self._pairw_cache: Dict = {}
         self._minslice_cache: Dict = {}
         # memoized decisions keyed on the frozen active set: successive
         # run_policy / drain iterations with an unchanged pending set skip
@@ -201,6 +202,21 @@ class KerneletScheduler:
             vals = self.model.pair_ipc_many(configs)
         self._pair_cache.update(zip(missing, vals))
 
+    def _pair_power(self, n1: str, w1: int, n2: str, w2: int) -> float:
+        """Decision-side draw of a pair config (watts, one virtual SM):
+        the measured value in oracle mode (cached next to the IPCs the
+        batch sweep already produced), the Markov-predicted one in model
+        mode. Used only by the power-cap gate in ``_search``."""
+        key = (n1, w1, n2, w2)
+        if key not in self._pairw_cache:
+            p1, p2 = self.profiles[n1], self.profiles[n2]
+            if self.decision_table is not None:
+                v = self.decision_table.pair_watts(p1, w1, p2, w2)
+            else:
+                v = self.model.pair_power(p1, w1, p2, w2)
+            self._pairw_cache[key] = v
+        return self._pairw_cache[key]
+
     def min_slice(self, name: str, scale: float = 1.0) -> int:
         # scale != 1.0 (online estimates) keys separately: a faster
         # believed kernel amortizes its launch overhead over fewer
@@ -249,8 +265,8 @@ class KerneletScheduler:
                 self.solo_ipc(n)
 
     # ---- FindCoSchedule ---- #
-    def find_coschedule(self, pending, *,
-                        scales=None) -> Optional[CoSchedule]:
+    def find_coschedule(self, pending, *, scales=None,
+                        power_cap=None) -> Optional[CoSchedule]:
         """pending: iterable of kernel names with blocks remaining.
 
         Decisions are memoized on the active *set*: profiles are fixed, so
@@ -263,26 +279,41 @@ class KerneletScheduler:
         map, persistent keys take an ``est|<digest>|`` prefix — so a
         refined estimate can never replay a decision taken under a stale
         one, and scale-free callers keep their exact historical keys
-        (an all-1.0 map normalizes to scale-free)."""
+        (an all-1.0 map normalizes to scale-free).
+
+        ``power_cap`` (watts, whole GPU) gates the *co-scheduling*
+        candidates: a pair whose decision-side draw exceeds the cap is
+        skipped, and when nothing fits the head kernel runs solo (solo
+        execution is never gated — the cap trades co-scheduling
+        throughput for power, it does not deny service). A finite cap
+        folds into both cache keys (``pcap|<cap>|`` persistent prefix);
+        ``None``/non-finite caps keep the exact historical keys."""
         names = sorted(set(pending))
         if not names:
             return None
+        if power_cap is not None and not np.isfinite(power_cap):
+            power_cap = None
         scales = effective_scales(scales)
         dg = None if scales is None else scales_digest(scales)
         key = (frozenset(names) if dg is None
                else (frozenset(names), dg))
+        if power_cap is not None:
+            key = ("pcap", power_cap, key)
         hit = self._decision_cache.get(key)
         if hit is None:
             store = self._decision_store()
             skey = self._decision_skey(names) if store is not None else None
             if skey is not None and dg is not None:
                 skey = f"est|{dg}|{skey}"
+            if skey is not None and power_cap is not None:
+                skey = f"pcap|{power_cap!r}|{skey}"
             if store is not None:
                 raw = store.get("coschedule", skey)
                 if raw is not None:
                     hit = CoSchedule.from_json(raw)
             if hit is None:
-                hit = self._search(names, scales=scales)
+                hit = self._search(names, scales=scales,
+                                   power_cap=power_cap)
                 # persist any fresh Markov solves this search produced: the
                 # module-level solve cache already dedupes across the
                 # per-run_policy scheduler instances, the store dedupes
@@ -391,7 +422,7 @@ class KerneletScheduler:
             return self._solo_schedule(head, scales)
         return best
 
-    def _search(self, names, scales=None) -> CoSchedule:
+    def _search(self, names, scales=None, power_cap=None) -> CoSchedule:
         sc = self._scale_fn(scales)
         if len(names) == 1:
             n = names[0]
@@ -428,6 +459,14 @@ class KerneletScheduler:
                 cand.append((a, wa, b, wb))
         self._prefetch_solo(names)
         self._eval_pairs(cand)
+        if power_cap is not None:
+            # gate after the batch IPC sweep: oracle-mode watts are already
+            # cached from the same simulate_many runs, so this pass is pure
+            # lookups. Filtering the candidate list (rather than special-
+            # casing the selection loop) keeps the head-solo fallback below
+            # as the natural "nothing fits under the cap" outcome.
+            cand = [c for c in cand
+                    if self._pair_power(*c) * self.gpu.n_sm <= power_cap]
         best, best_cp = None, -np.inf
         for a, wa, b, wb in cand:
             ia = self.solo_ipc(a) * sc(a)

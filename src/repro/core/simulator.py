@@ -53,6 +53,14 @@ class SimResult:
     instructions: list      # per-kernel instructions issued
     pur: list               # per-kernel pipeline utilization ratio
     mur: list               # per-kernel memory utilization ratio
+    # power model (PR 10): energy accrued by this configuration's single
+    # virtual SM over the simulated window, and its mean draw. Per-round
+    # accounting against the GPUSpec power coefficients: static idle +
+    # stalled-unit watts over the round duration, plus per-issue and
+    # per-memory-request event energies (uncoalesced events pay
+    # uncoal_factor * uncoal_penalty times the coalesced request energy).
+    energy_j: float = 0.0   # joules (= watt-cycles / (freq_mhz * 1e6))
+    avg_watts: float = 0.0  # energy / wall time == watt-cycles / cycles
 
 
 def _setup_units(profiles, units, blocks, insns_per_block):
@@ -72,12 +80,14 @@ def _setup_units(profiles, units, blocks, insns_per_block):
             np.asarray(rem_ins, dtype=np.float64), blocks_left, ipb)
 
 
-def _finish(instr, mem_reqs, cycles, nk, gpu):
+def _finish(instr, mem_reqs, cycles, nk, gpu, energy_wc=0.0):
     ipcs = [instr[k] / max(cycles, 1.0) * gpu.peak_ipc for k in range(nk)]
     purs = [ipcs[k] / gpu.peak_ipc for k in range(nk)]
     murs = [mem_reqs[k] / max(cycles, 1.0) / gpu.bw_per_sm for k in range(nk)]
     return SimResult(ipcs=ipcs, cycles=cycles, instructions=list(instr),
-                     pur=purs, mur=murs)
+                     pur=purs, mur=murs,
+                     energy_j=energy_wc / (gpu.freq_mhz * 1e6),
+                     avg_watts=energy_wc / max(cycles, 1.0))
 
 
 def simulate(profiles, units, gpu: GPUSpec, *, seed: int = 0,
@@ -198,12 +208,23 @@ def simulate_many(configs: Sequence[Tuple[Sequence[KernelProfile],
     mem_reqs = np.zeros(nk_total)
     cycles = np.zeros(nc)
     uf = gpu.uncoal_factor
+    # power accounting (watt-cycles, float64): the per-round accrual below
+    # is written as the exact same expression tree — over exact integer
+    # event counts — as the scalar reference's, so per-config energy is
+    # bit-identical to a standalone run regardless of batch composition
+    energy = np.zeros(nc)
+    iw, sw, ie = gpu.idle_watts, gpu.stall_watts, gpu.issue_energy
+    re_ = gpu.req_energy
+    ue = gpu.req_energy * uf * gpu.uncoal_penalty
+    _zc = np.zeros(nc, dtype=np.int64)
     r = 0
     while True:
         if any_ms:
             # per-config liveness: makespan configs run until every unit
             # retired its budget, steady-state ones exactly `rounds` rounds
-            alive_c = np.add.reduceat(alive.view(np.int8), cfg_starts) > 0
+            alive_cnt = np.add.reduceat(alive.view(np.int8),
+                                        cfg_starts).astype(np.int64)
+            alive_c = alive_cnt > 0
             running = np.where(is_ms, alive_c, r < rounds)
             if not running.any():
                 break
@@ -221,6 +242,10 @@ def simulate_many(configs: Sequence[Tuple[Sequence[KernelProfile],
         dur_c = np.maximum(n_ready_c, 1)
         if any_ms:
             dur_c = np.where(running, dur_c, 0)
+            n_stall_c = alive_cnt - n_ready_c
+        else:
+            n_stall_c = cfg_sizes - n_ready_c
+        n_co_c = n_un_c = _zc
         idx = np.where(ready)[0]          # config-major (units contiguous)
         if idx.size:
             ks = owner_g[idx]
@@ -269,7 +294,14 @@ def simulate_many(configs: Sequence[Tuple[Sequence[KernelProfile],
                 ks[mem_stall],
                 weights=np.where(is_uncoal[mem_stall], uf, 1.0),
                 minlength=nk_total)
+            # integer memory-event counts per config (coalesced vs
+            # uncoalesced) — counts, not summed weights, so the energy
+            # accrual is order-independent and bit-exact vs the scalar
+            n_un_c = np.bincount(cfg_rep[is_uncoal], minlength=nc)
+            n_co_c = np.bincount(cfg_rep[mem_stall], minlength=nc) - n_un_c
         cycles += dur_c
+        energy += (iw + sw * n_stall_c) * dur_c + ie * n_ready_c \
+            + re_ * n_co_c + ue * n_un_c
         np.subtract(rem_lat, np.repeat(dur_c, cfg_sizes), out=rem_lat)
         np.maximum(rem_lat, 0.0, out=rem_lat)
         mem_pend &= rem_lat > 0
@@ -291,7 +323,7 @@ def simulate_many(configs: Sequence[Tuple[Sequence[KernelProfile],
         nk = nk_of[c]
         sl = slice(kbase[c], kbase[c] + nk)
         out.append(_finish(instr[sl], mem_reqs[sl], float(cycles[c]),
-                           nk, gpu))
+                           nk, gpu, energy_wc=float(energy[c])))
     return out
 
 
@@ -418,6 +450,12 @@ def simulate_reference(profiles, units, gpu: GPUSpec, *, seed: int = 0,
     instr = np.zeros(nk)
     mem_reqs = np.zeros(nk)
     cycles = 0.0
+    # power accounting (watt-cycles): mirror expression of simulate_many's
+    # vectorized accrual — same operand values, same op order, bit-exact
+    energy = 0.0
+    iw, sw, ie = gpu.idle_watts, gpu.stall_watts, gpu.issue_energy
+    re_ = gpu.req_energy
+    ue = gpu.req_energy * gpu.uncoal_factor * gpu.uncoal_penalty
     r = 0
     while True:
         r += 1
@@ -425,9 +463,11 @@ def simulate_reference(profiles, units, gpu: GPUSpec, *, seed: int = 0,
             break
         if not alive.any():
             break
+        n_alive = int(alive.sum())
         ready = alive & (rem_lat <= 0)
         n_ready = int(ready.sum())
         dur = max(n_ready, 1)
+        n_co = n_un = 0
         # issue one instruction per ready unit
         if n_ready:
             ks = owner[ready]
@@ -456,8 +496,12 @@ def simulate_reference(profiles, units, gpu: GPUSpec, *, seed: int = 0,
             mem_pend[dp_idx] = False
             np.add.at(mem_reqs, ks[mem_stall],
                       np.where(is_uncoal[mem_stall], gpu.uncoal_factor, 1.0))
+            n_un = int(is_uncoal.sum())
+            n_co = int(mem_stall.sum()) - n_un
         # advance time
         cycles += dur
+        energy += (iw + sw * (n_alive - n_ready)) * dur + ie * n_ready \
+            + re_ * n_co + ue * n_un
         rem_lat = np.maximum(rem_lat - dur, 0.0)
         mem_pend &= rem_lat > 0
         # block retirement (makespan mode)
@@ -470,7 +514,7 @@ def simulate_reference(profiles, units, gpu: GPUSpec, *, seed: int = 0,
                     rem_ins[i] = ipb[k]
                 else:
                     alive[i] = False
-    return _finish(instr, mem_reqs, cycles, nk, gpu)
+    return _finish(instr, mem_reqs, cycles, nk, gpu, energy_wc=energy)
 
 
 # --------------------------------------------------------------------- #
@@ -494,6 +538,10 @@ class IPCTable:
         self.rounds = rounds
         self._solo = {}
         self._pair = {}
+        # per-config mean draw (avg_watts of the same measurement), cached
+        # next to the IPC values under the ``solo_w``/``pair_w`` store kinds
+        self._solo_w = {}
+        self._pair_w = {}
         self._store = (ipc_cache.open_ipc_cache(gpu, seed, rounds)
                        if persist else None)
 
@@ -522,6 +570,8 @@ class IPCTable:
                 f"{self.content_key}: measurement contents differ")
         self._solo.update(other._solo)
         self._pair.update(other._pair)
+        self._solo_w.update(other._solo_w)
+        self._pair_w.update(other._pair_w)
 
     # ---- persistent-store plumbing ---- #
     def _store_get(self, kind, prof_ws):
@@ -543,15 +593,21 @@ class IPCTable:
     def _measure(self, specs):
         """specs: list of (key_kind, in-mem key, [(prof, w), ...]). Measures
         every spec missing from both cache layers in one (possibly sharded)
-        simulate_many sweep and fills both layers."""
+        simulate_many sweep and fills both layers — the IPC value and the
+        config's mean draw together (a store entry counts as a hit only
+        when both are present, so files written before the power model
+        simply re-measure)."""
         missing, queued = [], set()
         for kind, key, prof_ws in specs:
             mem = self._solo if kind == "solo" else self._pair
+            memw = self._solo_w if kind == "solo" else self._pair_w
             if key in mem or (kind, key) in queued:
                 continue
             hit = self._store_get(kind, prof_ws)
-            if hit is not None:
+            hit_w = self._store_get(kind + "_w", prof_ws)
+            if hit is not None and hit_w is not None:
                 mem[key] = hit
+                memw[key] = hit_w
                 continue
             queued.add((kind, key))
             missing.append((kind, key, prof_ws))
@@ -562,10 +618,13 @@ class IPCTable:
                                             rounds=self.rounds)
             for (kind, key, prof_ws), res in zip(missing, results):
                 mem = self._solo if kind == "solo" else self._pair
+                memw = self._solo_w if kind == "solo" else self._pair_w
                 val = (res.ipcs[0] if kind == "solo"
                        else (res.ipcs[0], res.ipcs[1]))
                 mem[key] = val
+                memw[key] = res.avg_watts
                 self._store_put(kind, prof_ws, val)
+                self._store_put(kind + "_w", prof_ws, res.avg_watts)
             self.save()
 
     # ---- public API ---- #
@@ -594,6 +653,42 @@ class IPCTable:
                  for it in items]
         self._measure(specs)
         return [self._pair[tuple(it)] for it in items]
+
+    def solo_watts(self, prof: KernelProfile,
+                   w: Optional[int] = None) -> float:
+        """Measured mean draw (watts, one virtual SM) of the solo config —
+        cached by the same sweep that produced its IPC, so after a
+        ``solo``/``solo_many`` call this is a pure cache hit."""
+        w = w if w is not None else prof.active_units(self.gpu)
+        self._measure([("solo", (prof, w), [(prof, w)])])
+        return self._solo_w[(prof, w)]
+
+    def pair_watts(self, p1: KernelProfile, w1: int,
+                   p2: KernelProfile, w2: int) -> float:
+        """Measured mean draw (watts, one virtual SM) of the co-resident
+        pair config — one value for the pair, not per kernel (the SM draws
+        as a whole; attribution is a policy question, not a measurement)."""
+        key = (p1, w1, p2, w2)
+        self._measure([("pair", key, [(p1, w1), (p2, w2)])])
+        return self._pair_w[key]
+
+    def solo_with_watts(self, prof: KernelProfile,
+                        w: Optional[int] = None):
+        """(solo IPC, mean draw) in a single lookup round trip — the
+        engine's charge-pass accessor: both values come from the same
+        measurement, so fetching them together keeps the hot loop at one
+        ``_measure`` call per action (the pre-power-model cost). Delegates
+        to ``solo`` — which fills the watts cache as a side effect — so
+        instrumentation wrapping the single-value accessor still fires."""
+        w = w if w is not None else prof.active_units(self.gpu)
+        return self.solo(prof, w), self._solo_w[(prof, w)]
+
+    def pair_with_watts(self, p1: KernelProfile, w1: int,
+                        p2: KernelProfile, w2: int):
+        """((cIPC1, cIPC2), mean draw) in a single lookup round trip —
+        see ``solo_with_watts``."""
+        return (self.pair(p1, w1, p2, w2),
+                self._pair_w[(p1, w1, p2, w2)])
 
     def pair_row(self, p1: KernelProfile, p2: KernelProfile, splits):
         """All W splits of one pair (an IPC-table row) in one batched call.

@@ -148,7 +148,8 @@ class SharedPodServer:
         order = [n for n, j in self.jobs.items() if j.num_slices > 0]
         if not order:
             return {"predicted_makespan_cycles": 0.0, "time_line": [],
-                    "n_coschedules": 0, "latency": {}, "completions": []}
+                    "n_coschedules": 0, "latency": {}, "energy": {},
+                    "completions": []}
         if self._plan_truth is None:
             self._plan_truth = IPCTable(self.spec.virtual(), rounds=rounds,
                                         persist=False)
@@ -162,7 +163,8 @@ class SharedPodServer:
                 "time_line": res.time_line,
                 "n_coschedules": res.n_coschedules,
                 "policy": policy,
-                "latency": res.latency_metrics(slo_deadline),
+                "latency": dict(res.latency_metrics(slo_deadline)),
+                "energy": dict(res.energy_metrics()),
                 "completions": res.completions}
 
     def plan_fleet(self, n_pods: int, rate: float, *,
@@ -186,7 +188,7 @@ class SharedPodServer:
         order = [n for n, j in self.jobs.items() if j.num_slices > 0]
         if not order:
             return {"predicted_makespan_cycles": 0.0, "latency": {},
-                    "per_pod": [], "pods": [], "deal": None}
+                    "energy": {}, "per_pod": [], "pods": [], "deal": None}
         if pod_specs is not None:
             pod_specs = list(pod_specs)
             if len(pod_specs) != n_pods:
@@ -202,7 +204,8 @@ class SharedPodServer:
                           slo_deadline=slo_deadline, deal=deal,
                           gpus=pod_specs)
         return {"predicted_makespan_cycles": float(fleet.makespan),
-                "latency": fleet.latency,
+                "latency": dict(fleet.latency),
+                "energy": dict(fleet.energy),
                 "per_pod": [[n for n, _, _ in lane.completions]
                             for lane in fleet.lanes],
                 "pods": [s.name for s in fleet.gpus],

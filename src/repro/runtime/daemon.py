@@ -85,6 +85,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.engine import LaneSpec, WorkloadEngine
+from repro.core.online import AdaptConfig
 from repro.core.jobstore import (CANCELLED, FAILED, FINISHED, PAUSED,
                                  QUEUED, RUNNING, IllegalTransition,
                                  JobStore, JobStoreError, MemoryJobStore,
@@ -345,6 +346,17 @@ class ServingDaemon:
         priors = spec.get("priors")
         if priors:
             priors = {n: KernelProfile(**f) for n, f in priors.items()}
+        # adaptation knobs ride an AdaptConfig since PR 10; the JSON spec
+        # keeps the flat legacy field names for wire compatibility
+        adapt = bool(spec.get("adapt", False))
+        if adapt:
+            adapt = AdaptConfig(
+                alpha=float(spec.get("adapt_alpha", 0.5)),
+                reslice_threshold=float(spec.get("reslice_threshold",
+                                                 0.05)),
+                min_confidence=int(spec.get("adapt_min_conf", 2)),
+                probe_frac=float(spec.get("probe_frac", 0.25)))
+        pcap = spec.get("power_cap")
         return LaneSpec(
             policy=spec["policy"], profiles=profiles,
             order=list(spec["order"]), gpu=gpu, truth=truth,
@@ -356,12 +368,9 @@ class ServingDaemon:
             slo_deadline=spec.get("slo_deadline"),
             deadlines=spec.get("deadlines"),
             interpolate=bool(spec.get("interpolate", True)),
-            adapt=bool(spec.get("adapt", False)),
+            adapt=adapt,
             priors=priors or None,
-            adapt_alpha=float(spec.get("adapt_alpha", 0.5)),
-            reslice_threshold=float(spec.get("reslice_threshold", 0.05)),
-            adapt_min_conf=int(spec.get("adapt_min_conf", 2)),
-            probe_frac=float(spec.get("probe_frac", 0.25)))
+            power_cap=None if pcap is None else float(pcap))
 
     # ---- drain machinery ---- #
     @staticmethod
@@ -374,6 +383,9 @@ class ServingDaemon:
                "time_line": [[float(t), e] for t, e in res.time_line],
                "completions": [[n, float(a), float(c)]
                                for n, a, c in res.completions],
+               "energy_j": float(res.energy_j),
+               "avg_watts": float(res.avg_watts),
+               "max_watts": float(res.max_watts),
                "phases": int(phases), "partial": bool(partial)}
         if res.adapt_stats is not None:
             out["adapt_stats"] = res.adapt_stats

@@ -29,7 +29,13 @@ PROF = KernelProfile("K", rm=0.1, coal=1.0, insns_per_block=100.0,
 
 @pytest.fixture
 def cache_env(tmp_path, monkeypatch):
+    # pinned to the json backend: the tests on this fixture exercise the
+    # JSON store's corruption/merge/file-shape semantics (still fully
+    # supported via REPRO_STORE_BACKEND=json; the process default is
+    # sqlite since PR 10). The sqlite contract is covered by the
+    # backend-parameterized round trips and the SIGKILL test below.
     monkeypatch.setenv("REPRO_IPC_CACHE", str(tmp_path))
+    monkeypatch.setenv("REPRO_STORE_BACKEND", "json")
     return tmp_path
 
 

@@ -303,9 +303,9 @@ def test_lanes_share_scheduler_searches(no_persist, profiles, truth,
     searches = []
     orig = KerneletScheduler._search
 
-    def spy(self, names, scales=None):
+    def spy(self, names, scales=None, power_cap=None):
         searches.append(tuple(names))
-        return orig(self, names, scales=scales)
+        return orig(self, names, scales=scales, power_cap=power_cap)
 
     monkeypatch.setattr(KerneletScheduler, "_search", spy)
     order = order_for(profiles)
@@ -342,7 +342,9 @@ def test_decision_cache_cold_process_skips_search(profiles, tmp_path,
     assert stored, "decision must be persisted"
     # the file version folds in the physics schemas decisions derive from,
     # so a Markov/simulator bump can never serve a stale decision
-    assert f"_v{DECISION_STORE_SCHEMA}.json" in stored[0]
+    # extension-agnostic: the default backend is sqlite since PR 10, but
+    # the version pin must hold for either backend
+    assert f"_v{DECISION_STORE_SCHEMA}." in stored[0]
     assert DECISION_STORE_SCHEMA != DECISION_SCHEMA
     _fresh_decision_process()            # cold process: only disk is warm
     sched = KerneletScheduler(GPU, profiles)

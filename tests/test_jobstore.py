@@ -271,32 +271,29 @@ def test_sqlite_ipc_cache_typed_access(tmp_path):
 # factory dispatch + gc across backends
 # ------------------------------------------------------------------ #
 def test_open_store_backend_dispatch(tmp_path, monkeypatch):
+    # sqlite is the default backend since PR 10 (unset env -> sqlite)
     monkeypatch.delenv(ipc_cache.ENV_BACKEND, raising=False)
     s = ipc_cache.open_store("s", ("k",), schema=1, dirname=str(tmp_path))
-    assert type(s) is ipc_cache.ArtifactStore
-    monkeypatch.setenv(ipc_cache.ENV_BACKEND, "sqlite")
-    s = ipc_cache.open_store("s", ("k",), schema=1, dirname=str(tmp_path))
     assert type(s) is SqliteArtifactStore
+    monkeypatch.setenv(ipc_cache.ENV_BACKEND, "json")
+    s = ipc_cache.open_store("s", ("k",), schema=1, dirname=str(tmp_path))
+    assert type(s) is ipc_cache.ArtifactStore   # json stays selectable
     monkeypatch.setenv(ipc_cache.ENV_BACKEND, "bogus")
     s = ipc_cache.open_store("s", ("k",), schema=1, dirname=str(tmp_path))
-    assert type(s) is ipc_cache.ArtifactStore   # unknown -> json, never fail
+    assert type(s) is SqliteArtifactStore  # unknown -> default, never fail
     # explicit argument beats the env var
     s = ipc_cache.open_store("s", ("k",), schema=1, dirname=str(tmp_path),
-                             backend="sqlite")
-    assert type(s) is SqliteArtifactStore
+                             backend="json")
+    assert type(s) is ipc_cache.ArtifactStore
 
 
-def test_unset_backend_env_warns_deprecation_once(monkeypatch):
+def test_unset_backend_env_defaults_sqlite_without_warning(monkeypatch):
+    # the PR 9 implicit-backend DeprecationWarning is gone: an unset env
+    # now silently means the sqlite default
     monkeypatch.delenv(ipc_cache.ENV_BACKEND, raising=False)
-    monkeypatch.setattr(ipc_cache, "_warned_implicit_backend", False)
-    with pytest.warns(DeprecationWarning, match=ipc_cache.ENV_BACKEND):
-        assert ipc_cache.store_backend() == "json"
-    # once per process: the second implicit call stays silent
     with warnings.catch_warnings():
         warnings.simplefilter("error")
-        assert ipc_cache.store_backend() == "json"
-    # an explicit setting never warns, even on a fresh process flag
-    monkeypatch.setattr(ipc_cache, "_warned_implicit_backend", False)
+        assert ipc_cache.store_backend() == "sqlite"
     monkeypatch.setenv(ipc_cache.ENV_BACKEND, "json")
     with warnings.catch_warnings():
         warnings.simplefilter("error")

@@ -7,7 +7,7 @@ import pytest
 
 import repro.core.simulator as SIM
 from repro.core.calibrate import calibrated_benchmarks
-from repro.core.ipc_cache import IPCCache
+from repro.core.ipc_cache import open_ipc_cache
 from repro.core.profiles import C2050, KernelProfile
 from repro.core.queue import _Pending, make_workload, run_policy
 from repro.core.scheduler import KerneletScheduler
@@ -207,7 +207,7 @@ def test_ipc_cache_content_addressing(profs, tmp_path, monkeypatch):
     t = IPCTable(VG, rounds=ROUNDS)
     t.solo(pa)
     t.solo(dataclasses.replace(pa, rm=pa.rm * 1.5))    # same name, new key
-    store = IPCCache(VG, 0, ROUNDS)
+    store = open_ipc_cache(VG, 0, ROUNDS)
     assert len(store._data["solo"]) == 2
     IPCTable(VG, rounds=ROUNDS + 500).solo(pa)
     files = sorted(f.name for f in tmp_path.iterdir())
@@ -218,7 +218,7 @@ def test_ipc_cache_disabled_env(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_IPC_CACHE", "0")
     p = KernelProfile("K", rm=0.1, coal=1.0, insns_per_block=100.0,
                       num_blocks=64, occupancy=1.0)
-    cache = IPCCache(VG, 0, ROUNDS)
+    cache = open_ipc_cache(VG, 0, ROUNDS)
     assert cache.path is None
     t = IPCTable(VG, rounds=ROUNDS)
     t.solo(p)

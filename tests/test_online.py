@@ -314,9 +314,9 @@ def test_scaled_decisions_never_hit_plain_entries(profiles, tmp_path,
     calls = []
     orig = KerneletScheduler._search
 
-    def spy(self, ns, scales=None):
+    def spy(self, ns, scales=None, power_cap=None):
         calls.append(scales)
-        return orig(self, ns, scales=scales)
+        return orig(self, ns, scales=scales, power_cap=power_cap)
 
     monkeypatch.setattr(KerneletScheduler, "_search", spy)
     # same process, same active set, new scales: memo must miss

@@ -1,0 +1,362 @@
+"""Power model tier (PR 10): watts accounting in the SM simulator, the
+energy metrics threaded through the engine, and the POWERCAP policy gate.
+
+Contracts pinned here:
+
+  * **Observer-only accounting.** The power model never perturbs the
+    simulated dynamics: scaling any power coefficient leaves IPC,
+    cycles, and instruction counts bit-identical and only moves energy.
+  * **Exact idle floor.** With the dynamic coefficients zeroed, every
+    configuration draws *exactly* ``idle_watts`` (the coefficient is a
+    power of two so the per-round products and their sum stay exact).
+  * **Batch-composition independence.** ``simulate_many`` energy fields
+    are bit-identical to the scalar ``simulate_reference`` regardless of
+    which other configurations share the batch, in both steady-state
+    and makespan mode — the invariant that makes per-config caching of
+    watts safe.
+  * **POWERCAP gate.** Co-schedules are only taken while the predicted
+    whole-GPU draw stays under the cap; an unsatisfiable cap degrades
+    to solo execution, and ``power_cap=None`` (or a non-finite cap) is
+    byte-identical to KERNELET including its decision-cache keys.
+  * **AdaptConfig shim.** The deprecated flat adapt kwargs produce
+    bit-identical runs to the consolidated ``AdaptConfig``.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (FleetResult, LaneSpec, aggregate_energy,
+                               run_fleet, run_lanes)
+from repro.core.online import AdaptConfig
+from repro.core.profiles import C2050, KernelProfile
+from repro.core.queue import Metrics, WorkloadResult, run_policy
+from repro.core.scheduler import KerneletScheduler
+from repro.core.simulator import (IPCTable, simulate, simulate_many,
+                                  simulate_reference)
+
+GPU = C2050
+VG = GPU.virtual()
+ROUNDS = 300
+
+
+def prof(name, rm, coal=1.0, dep=0.0, blocks=64, ipb=200.0, occ=1.0,
+         pur=0.5, mur=0.1):
+    return KernelProfile(name, rm=rm, coal=coal, insns_per_block=ipb,
+                         num_blocks=blocks, occupancy=occ, pur=pur,
+                         mur=mur, dep_ratio=dep)
+
+
+@pytest.fixture(scope="module")
+def profiles():
+    return {
+        "CA": prof("CA", 0.05, pur=0.9, mur=0.02, blocks=60),
+        "CB": prof("CB", 0.08, dep=0.15, pur=0.6, mur=0.05, blocks=40,
+                   ipb=150.0),
+        "MA": prof("MA", 0.4, coal=0.3, pur=0.1, mur=0.25, blocks=80,
+                   ipb=300.0),
+        "MB": prof("MB", 0.3, pur=0.2, mur=0.2, blocks=50, ipb=250.0),
+    }
+
+
+@pytest.fixture()
+def no_persist(monkeypatch):
+    monkeypatch.setenv("REPRO_IPC_CACHE", "0")
+
+
+@pytest.fixture()
+def truth():
+    return IPCTable(VG, rounds=ROUNDS, persist=False)
+
+
+ORDER = ["MA", "CA", "MB", "CB", "CA", "MA", "CB", "MB"]
+
+
+# ------------------------------------------------------------------ #
+# simulator: the watts model itself
+# ------------------------------------------------------------------ #
+def test_zero_dynamic_energy_is_exactly_idle_watts():
+    # stall/issue/request energies zeroed: the only draw left is the
+    # static idle term, and idle_watts being a power of two makes every
+    # per-round product (and their sum) exact — so the equality is ==,
+    # not approx.
+    g = dataclasses.replace(VG, stall_watts=0.0, issue_energy=0.0,
+                            req_energy=0.0)
+    for p in (prof("C", 0.02, pur=0.9), prof("M", 0.5, coal=0.2)):
+        r = simulate([p], [8], g, seed=0, rounds=ROUNDS)
+        assert r.avg_watts == g.idle_watts
+        assert r.energy_j == g.idle_watts * r.cycles / (g.freq_mhz * 1e6)
+
+
+def test_power_model_is_observer_only():
+    # scaling every power coefficient must not move a single dynamics
+    # output: same IPCs, cycles, and instruction counts bit-for-bit
+    p1, p2 = prof("A", 0.3, coal=0.4), prof("B", 0.05, pur=0.8)
+    hot = dataclasses.replace(VG, idle_watts=VG.idle_watts * 4,
+                              stall_watts=VG.stall_watts * 3,
+                              issue_energy=VG.issue_energy * 7,
+                              req_energy=VG.req_energy * 2,
+                              uncoal_penalty=VG.uncoal_penalty * 5)
+    a = simulate([p1, p2], [5, 3], VG, seed=3, rounds=ROUNDS)
+    b = simulate([p1, p2], [5, 3], hot, seed=3, rounds=ROUNDS)
+    assert a.ipcs == b.ipcs and a.cycles == b.cycles
+    assert a.instructions == b.instructions
+    assert b.energy_j > a.energy_j
+
+
+def test_energy_monotone_in_event_coefficients():
+    p = prof("K", 0.3, coal=0.5)
+    base = simulate([p], [8], VG, seed=1, rounds=ROUNDS)
+    for field in ("issue_energy", "req_energy", "stall_watts",
+                  "uncoal_penalty"):
+        g = dataclasses.replace(VG, **{field: getattr(VG, field) * 2})
+        r = simulate([p], [8], g, seed=1, rounds=ROUNDS)
+        assert r.energy_j > base.energy_j, field
+
+
+def test_uncoalesced_requests_cost_more_energy():
+    # identical request rate, worse coalescing: dynamics differ (the
+    # uncoalesced kernel stalls more, so don't compare cycles) but the
+    # per-event premium must show up in mean draw per memory request
+    coal = simulate([prof("C", 0.4, coal=1.0)], [8], VG, seed=0,
+                    rounds=ROUNDS)
+    unco = simulate([prof("U", 0.4, coal=0.0)], [8], VG, seed=0,
+                    rounds=ROUNDS)
+    assert unco.avg_watts > coal.avg_watts or unco.energy_j > coal.energy_j
+
+
+@pytest.mark.parametrize("mode", ["steady", "makespan"])
+def test_batched_energy_bit_identical_to_scalar_reference(mode):
+    # the core cacheability invariant, extended to the energy fields:
+    # batch composition must not change any config's watts
+    cfgs = [
+        ([prof("A", 0.3, coal=0.4)], [8]),
+        ([prof("B", 0.05, pur=0.8), prof("C", 0.4, coal=0.3)], [5, 3]),
+        ([prof("D", 0.2, dep=0.2)], [6]),
+        ([prof("E", 0.5, coal=0.1), prof("F", 0.02)], [2, 6]),
+    ]
+    kw = {}
+    if mode == "makespan":
+        kw["blocks"] = [[6.0] * len(u) for _, u in cfgs]
+    batch = simulate_many(cfgs, VG, seed=7, rounds=ROUNDS, **kw)
+    for i, (ps, us) in enumerate(cfgs):
+        ref = simulate_reference(
+            ps, us, VG, seed=7, rounds=ROUNDS,
+            blocks=None if mode == "steady" else kw["blocks"][i])
+        assert batch[i].energy_j == ref.energy_j
+        assert batch[i].avg_watts == ref.avg_watts
+        assert batch[i].ipcs == ref.ipcs and batch[i].cycles == ref.cycles
+    # and batch-of-one through simulate() agrees too
+    solo = simulate(cfgs[0][0], cfgs[0][1], VG, seed=7, rounds=ROUNDS,
+                    blocks=None if mode == "steady" else kw["blocks"][0])
+    assert solo.energy_j == batch[0].energy_j
+
+
+def test_ipc_table_watts_cached_with_ipc(no_persist, profiles):
+    # solo_many/pair_many fill the watts caches alongside the IPC ones:
+    # the later watts lookups are pure hits (no new simulation), and
+    # they agree with a direct measurement
+    t = IPCTable(VG, rounds=ROUNDS, persist=False)
+    ca, ma = profiles["CA"], profiles["MA"]
+    wu = ca.active_units(VG)
+    t.solo_many([(ca, wu), (ma, ma.active_units(VG))])
+    t.pair_many([(ca, 2, ma, 2)])
+    w = t.solo_watts(ca, wu)
+    ref = simulate([ca], [wu], VG, seed=t.seed, rounds=ROUNDS)
+    assert w == ref.avg_watts
+    pw = t.pair_watts(ca, 2, ma, 2)
+    pref = simulate([ca, ma], [2, 2], VG, seed=t.seed, rounds=ROUNDS)
+    assert pw == pref.avg_watts
+
+
+# ------------------------------------------------------------------ #
+# POWERCAP: the capped policy family
+# ------------------------------------------------------------------ #
+def _lane(policy, profiles, truth, **kw):
+    # cp_margin=0.0 so the model-driven search actually co-schedules on
+    # this profile set (same device as the engine golden pins)
+    return run_lanes([LaneSpec(policy=policy, profiles=profiles,
+                               order=list(ORDER), gpu=GPU, truth=truth,
+                               cp_margin=0.0, **kw)])[0]
+
+
+def test_powercap_gate_bounds_every_pair_decision(no_persist, profiles):
+    names = list(profiles)
+    sched = KerneletScheduler(GPU, profiles, cp_margin=0.0)
+    free = sched.find_coschedule(names)
+    assert free is not None and free.k2 is not None
+    # pick a cap between the cheapest and dearest predicted pair draw so
+    # the gate actually bites without forbidding everything
+    draws = sorted(
+        sched._pair_power(n1, w, n2, GPU.units_per_sm - w) * GPU.n_sm
+        for i, n1 in enumerate(names) for n2 in names[i + 1:]
+        for w in (GPU.units_per_sm // 2,))
+    cap = (draws[0] + draws[-1]) / 2.0
+    capped = KerneletScheduler(GPU, profiles, cp_margin=0.0)
+    cs = capped.find_coschedule(names, power_cap=cap)
+    assert cs is not None
+    if cs.k2 is not None:
+        got = capped._pair_power(cs.k1, cs.w1, cs.k2, cs.w2) * GPU.n_sm
+        assert got <= cap
+
+
+def test_powercap_unsatisfiable_cap_degrades_to_solo(no_persist, profiles):
+    sched = KerneletScheduler(GPU, profiles, cp_margin=0.0)
+    cs = sched.find_coschedule(list(profiles), power_cap=0.0)
+    assert cs is not None and cs.k2 is None
+
+
+def test_powercap_infinite_cap_is_the_uncapped_decision(no_persist,
+                                                        profiles):
+    a = KerneletScheduler(GPU, profiles, cp_margin=0.0)
+    b = KerneletScheduler(GPU, profiles, cp_margin=0.0)
+    free = a.find_coschedule(list(profiles))
+    inf = b.find_coschedule(list(profiles), power_cap=float("inf"))
+    assert dataclasses.asdict(inf) == dataclasses.asdict(free)
+    # non-finite caps normalise away entirely: the memo key is the
+    # uncapped one, so a later uncapped call on the same set is a hit
+    assert set(a._decision_cache) == set(b._decision_cache)
+
+
+def test_powercap_none_cap_bit_identical_to_kernelet(no_persist, profiles,
+                                                     truth):
+    k = _lane("KERNELET", profiles, truth)
+    assert k.n_coschedules > 0       # the comparison must exercise pairs
+    p = _lane("POWERCAP", profiles, truth, power_cap=None)
+    assert p.total_cycles == k.total_cycles
+    assert p.time_line == k.time_line
+    assert p.energy_j == k.energy_j and p.max_watts == k.max_watts
+
+
+def test_powercap_zero_cap_runs_everything_solo(no_persist, profiles,
+                                                truth):
+    k = _lane("KERNELET", profiles, truth)
+    r = _lane("POWERCAP", profiles, truth, power_cap=0.0)
+    assert r.n_coschedules == 0
+    # serialising the lane trades makespan for the cap
+    assert r.total_cycles >= k.total_cycles
+    assert r.energy_j > 0.0
+
+
+def test_powercap_generous_cap_keeps_coscheduling(no_persist, profiles,
+                                                  truth):
+    k = _lane("KERNELET", profiles, truth)
+    r = _lane("POWERCAP", profiles, truth, power_cap=1e9)
+    assert r.n_coschedules == k.n_coschedules > 0
+    assert r.total_cycles == k.total_cycles
+
+
+def test_powercap_caps_have_distinct_decision_identities(no_persist,
+                                                         profiles):
+    # two different caps must never share a memo entry — a replay under
+    # cap A cannot serve a query under cap B
+    sched = KerneletScheduler(GPU, profiles)
+    names = list(profiles)
+    sched.find_coschedule(names, power_cap=200.0)
+    n1 = len(sched._decision_cache)
+    sched.find_coschedule(names, power_cap=900.0)
+    assert len(sched._decision_cache) == n1 + 1
+    sched.find_coschedule(names)
+    assert len(sched._decision_cache) == n1 + 2
+
+
+# ------------------------------------------------------------------ #
+# engine + fleet energy pooling
+# ------------------------------------------------------------------ #
+def test_lane_energy_is_positive_and_consistent(no_persist, profiles,
+                                                truth):
+    r = run_policy("KERNELET", profiles, ORDER, GPU, truth, seed=0)
+    assert r.energy_j > 0.0
+    assert 0.0 < r.avg_watts <= r.max_watts
+    # avg_watts is defined as total energy over busy time
+    hz = GPU.freq_mhz * 1e6
+    assert r.avg_watts == pytest.approx(r.energy_j * hz / r.total_cycles)
+
+
+def test_fleet_energy_pools_lane_sums(no_persist, profiles, truth):
+    fleet = run_fleet("KERNELET", profiles, ORDER * 2, GPU, truth,
+                      n_gpus=2, seed=0)
+    assert isinstance(fleet, FleetResult) and fleet.energy is not None
+    assert fleet.energy["energy_j"] == sum(l.energy_j for l in fleet.lanes)
+    assert fleet.energy["avg_watts"] == sum(l.avg_watts
+                                            for l in fleet.lanes)
+    assert fleet.energy["max_watts"] == max(l.max_watts
+                                            for l in fleet.lanes)
+    # backlog fleet: no completion records, so the per-instance ratios
+    # are undefined rather than silently zero
+    assert "energy_per_instance" not in fleet.energy
+    assert "throughput_per_watt" not in fleet.energy
+
+
+def test_aggregate_energy_ratios_use_pooled_completions():
+    mk = lambda e, n: WorkloadResult(
+        policy="KERNELET", total_cycles=10.0, n_coschedules=0,
+        n_slices=0.0, time_line=[], energy_j=e, avg_watts=e,
+        max_watts=e, completions=[("k", 0.0, 1.0)] * n)
+    m = aggregate_energy([mk(2.0, 3), mk(4.0, 1)])
+    assert m["energy_j"] == 6.0
+    assert m["energy_per_instance"] == pytest.approx(6.0 / 4)
+    assert m["throughput_per_watt"] == pytest.approx(4 / 6.0)
+    empty = aggregate_energy([])
+    assert empty["energy_j"] == 0.0 and empty["max_watts"] == 0.0
+
+
+def test_workload_energy_metrics_explicit_denominator(no_persist,
+                                                      profiles, truth):
+    r = run_policy("KERNELET", profiles, ORDER, GPU, truth, seed=0)
+    m = r.energy_metrics(n_instances=len(ORDER))
+    assert m["energy_per_instance"] == pytest.approx(
+        r.energy_j / len(ORDER))
+    assert m["throughput_per_watt"] == pytest.approx(
+        len(ORDER) / r.energy_j)
+    # backlog run with no explicit denominator: ratios undefined
+    assert "energy_per_instance" not in r.energy_metrics()
+
+
+# ------------------------------------------------------------------ #
+# Metrics mapping + AdaptConfig shim
+# ------------------------------------------------------------------ #
+def test_metrics_behaves_like_a_mapping():
+    m = Metrics(energy_j=2.0, avg_watts=1.0)
+    assert m["energy_j"] == 2.0 and "energy_j" in m
+    assert "wait_p50" not in m                      # unset field
+    with pytest.raises(KeyError):
+        m["wait_p50"]
+    with pytest.raises(KeyError):
+        m["not_a_field"]
+    assert dict(m) == {"energy_j": 2.0, "avg_watts": 1.0}
+    assert m == {"energy_j": 2.0, "avg_watts": 1.0}  # Mapping equality
+    assert m.to_dict() == dict(m)
+    assert len(m) == 2 and sorted(m) == ["avg_watts", "energy_j"]
+
+
+def test_adaptconfig_matches_legacy_kwargs_bit_identically(no_persist,
+                                                           profiles,
+                                                           truth):
+    kw = dict(alpha=0.3, reslice_threshold=0.02, min_confidence=3,
+              probe_frac=0.2)
+    new = run_policy("KERNELET", profiles, ORDER, GPU, truth, seed=0,
+                     adapt=AdaptConfig(**kw))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = run_policy("KERNELET", profiles, ORDER, GPU, truth, seed=0,
+                         adapt=True, adapt_alpha=0.3,
+                         reslice_threshold=0.02, adapt_min_conf=3,
+                         probe_frac=0.2)
+    assert new.total_cycles == old.total_cycles
+    assert new.time_line == old.time_line
+    assert new.adapt_stats == old.adapt_stats
+    assert new.energy_j == old.energy_j
+
+
+def test_legacy_adapt_kwargs_warn_and_mixing_raises():
+    with pytest.warns(DeprecationWarning):
+        spec = LaneSpec(policy="KERNELET", profiles={}, order=[],
+                        gpu=GPU, truth=None, adapt=True, adapt_alpha=0.7)
+    assert spec.adapt_config().alpha == 0.7
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(ValueError):
+            LaneSpec(policy="KERNELET", profiles={}, order=[], gpu=GPU,
+                     truth=None, adapt=AdaptConfig(), adapt_alpha=0.7)
